@@ -1,0 +1,31 @@
+"""Paper §C.2: lambda-schedule ablation (fixed / increasing / decreasing).
+The paper finds increasing best (wide basins matter most near convergence);
+note the paper's own text has the labels swapped in one sentence — we
+report all three and the ordering."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv, default_data, run_distributed
+from repro.configs import DPPFConfig
+
+SEEDS = (42, 182, 437)
+
+
+def run(steps=400, M=4):
+    data = default_data()
+    out = {}
+    for sched in ("fixed", "increasing", "decreasing"):
+        errs = [run_distributed(
+            data, DPPFConfig(alpha=0.1, lam=0.5, tau=4, lam_schedule=sched),
+            M=M, steps=steps, seed=s).test_err for s in SEEDS]
+        out[sched] = (float(np.mean(errs)), float(np.std(errs)))
+        csv("ablate_schedule", schedule=sched,
+            test_err=round(out[sched][0], 2), std=round(out[sched][1], 2))
+    best = min(out, key=lambda k: out[k][0])
+    csv("ablate_schedule_summary", best=best)
+    return out
+
+
+if __name__ == "__main__":
+    run()

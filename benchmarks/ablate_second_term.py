@@ -1,0 +1,35 @@
+"""Paper §D.1 / Figure 7: is the dropped second term T2 (mean unit
+direction) really negligible? We track ||T1||, ||T2||, ||T1+T2|| during DPPF
+training and compare final errors of simplified vs exact updates."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv, default_data, run_distributed
+from repro.configs import DPPFConfig
+from repro.core import pullpush as pp
+
+
+def run(steps=400, M=4):
+    data = default_data()
+    r_simple = run_distributed(
+        data, DPPFConfig(alpha=0.1, lam=0.5, tau=4), M=M, steps=steps)
+    r_exact = run_distributed(
+        data, DPPFConfig(alpha=0.1, lam=0.5, tau=4, exact_second_term=True),
+        M=M, steps=steps)
+    # term norms at the final point
+    stacked = jax.tree.map(lambda *ls: np.stack(ls), *r_simple.workers)
+    stacked = jax.tree.map(jax.numpy.asarray, stacked)
+    n1, n2, n12 = pp.push_terms_norms(stacked, lam_r=0.5 * M)
+    csv("ablate_second_term",
+        t1_norm=round(float(np.mean(np.asarray(n1))), 4),
+        t2_norm=round(float(n2), 4),
+        t1_plus_t2_norm=round(float(np.mean(np.asarray(n12))), 4),
+        err_simplified=round(r_simple.test_err, 2),
+        err_exact=round(r_exact.test_err, 2),
+        t2_negligible=bool(float(n2) < 0.5 * float(np.mean(np.asarray(n1)))))
+
+
+if __name__ == "__main__":
+    run()

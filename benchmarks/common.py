@@ -1,0 +1,182 @@
+"""Shared harness for the paper-table benchmarks.
+
+CPU-scale stand-in for the paper's CIFAR/ResNet experiments: an MLP
+classifier on Gaussian-cluster data with label noise (overfits -> visible
+generalization gaps), trained with the SAME distributed trainer the big
+architectures use. Every paper table maps to one module here; the
+qualitative orderings (DPPF vs baselines) are the reproduction target —
+see EXPERIMENTS.md for the mapping to the paper's absolute numbers.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import DPPFConfig
+from repro.core import pullpush as pp
+from repro.data import classification_task
+from repro.optim import make_optimizer
+from repro.train import init_train_state, make_ddp_step, make_round_step
+from repro.train.trainer import TrainState, average_params
+
+
+# ---------------------------------------------------------------------------
+# Small model
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, dim, n_classes, width=64, depth=2):
+    ks = jax.random.split(key, depth + 1)
+    sizes = [dim] + [width] * depth + [n_classes]
+    return {f"l{i}": {
+        "w": jax.random.normal(ks[i], (sizes[i], sizes[i + 1])) * sizes[i] ** -0.5,
+        "b": jnp.zeros((sizes[i + 1],)),
+    } for i in range(depth + 1)}
+
+
+def mlp_logits(params, x):
+    n = len(params)
+    for i in range(n):
+        x = x @ params[f"l{i}"]["w"] + params[f"l{i}"]["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def mlp_loss(params, batch):
+    logits = mlp_logits(params, batch["x"])
+    labels = batch["y"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(lse - picked)
+    return loss, {"loss": loss, "aux": jnp.float32(0.0)}
+
+
+def error_pct(params, x, y):
+    pred = jnp.argmax(mlp_logits(params, x), axis=-1)
+    return float(100.0 * jnp.mean((pred != y).astype(jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# Data plumbing
+# ---------------------------------------------------------------------------
+
+def worker_shards(n, M, seed=0):
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n)
+    return np.array_split(idx, M)
+
+
+def round_batches(data, shards, rng, tau, M, bs):
+    xs, ys = [], []
+    for _ in range(tau):
+        bx, by = [], []
+        for m in range(M):
+            pick = rng.choice(shards[m], size=bs, replace=False)
+            bx.append(np.asarray(data["x_train"])[pick])
+            by.append(np.asarray(data["y_train"])[pick])
+        xs.append(np.stack(bx))
+        ys.append(np.stack(by))
+    return {"x": jnp.asarray(np.stack(xs)), "y": jnp.asarray(np.stack(ys))}
+
+
+# ---------------------------------------------------------------------------
+# Training drivers
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RunResult:
+    test_err: float
+    train_err: float
+    gen_gap: float
+    comm_pct: float          # communication volume vs DDP (100 = per-step)
+    consensus_dist: float
+    history: dict
+    params_avg: object
+    workers: list            # per-worker param trees (for MV measure)
+    seconds: float
+
+
+def run_distributed(data, dcfg: DPPFConfig, *, M=4, bs=64, steps=400,
+                    lr=0.05, momentum=0.9, wd=1e-3, sam_rho=0.0, width=64,
+                    seed=0, qsr_eta_max=None, track_every=0):
+    """Train with the shared trainer; returns RunResult. ``dcfg.consensus ==
+    'ddp'`` uses the per-step gradient-averaging path."""
+    key = jax.random.PRNGKey(seed)
+    opt = make_optimizer("sgd", momentum=momentum, weight_decay=wd)
+    p0 = lambda k: mlp_init(k, data["dim"], data["n_classes"], width)
+    shards = worker_shards(len(data["x_train"]), M, seed)
+    rng = np.random.default_rng(seed + 1)
+    t0 = time.time()
+    history = {"consensus_dist": [], "step": [], "pull": [], "push": [],
+               "lam": []}
+
+    if dcfg.consensus == "ddp":
+        params = p0(key)
+        state = TrainState(params=params, opt=opt.init(params), cstate={},
+                           t=jnp.zeros((), jnp.int32))
+        step_fn = jax.jit(make_ddp_step(mlp_loss, opt, base_lr=lr,
+                                        total_steps=steps, sam_rho=sam_rho))
+        for s in range(steps):
+            b = round_batches(data, shards, rng, 1, M, bs)
+            b = jax.tree.map(lambda a: a[0], b)
+            state, _ = step_fn(state, b)
+        avg = state.params
+        workers = [state.params]
+        comm_pct, cdist = 100.0, 0.0
+    else:
+        state = init_train_state(p0, opt, dcfg, M, key)
+        rounds_total = max(steps // dcfg.tau, 1)
+        step_fn = jax.jit(make_round_step(
+            mlp_loss, opt, dcfg, base_lr=lr, total_steps=steps,
+            sam_rho=sam_rho, total_rounds=rounds_total))
+        from repro.core.schedules import cosine_lr, qsr_tau
+        t, comm_rounds = 0, 0
+        qsr_fns = {}
+        while t < steps:
+            if dcfg.qsr_beta > 0:
+                eta_t = float(cosine_lr(lr, t, steps))
+                tau_t = min(qsr_tau(eta_t, dcfg.tau, dcfg.qsr_beta),
+                            max(steps - t, 1))
+                if tau_t not in qsr_fns:
+                    import dataclasses as dc
+                    qsr_fns[tau_t] = jax.jit(make_round_step(
+                        mlp_loss, opt, dc.replace(dcfg, tau=tau_t),
+                        base_lr=lr, total_steps=steps, sam_rho=sam_rho,
+                        total_rounds=rounds_total))
+                fn, tau_eff = qsr_fns[tau_t], tau_t
+            else:
+                fn, tau_eff = step_fn, dcfg.tau
+            b = round_batches(data, shards, rng, tau_eff, M, bs)
+            state, m = fn(state, b)
+            t += tau_eff
+            comm_rounds += 1
+            if track_every and (comm_rounds % track_every == 0):
+                history["consensus_dist"].append(float(m["consensus_dist"]))
+                history["pull"].append(float(m.get("pull_force", 0.0)))
+                history["push"].append(float(m.get("push_force", 0.0)))
+                history["lam"].append(float(m.get("lam_t", 0.0)))
+                history["step"].append(t)
+        avg = average_params(state)
+        workers = [jax.tree.map(lambda a, i=i: a[i], state.params)
+                   for i in range(M)]
+        comm_pct = 100.0 * comm_rounds / steps
+        cdist = float(pp.worker_dists(state.params).mean())
+
+    train_err = error_pct(avg, data["x_train"], data["y_train"])
+    test_err = error_pct(avg, data["x_test"], data["y_test"])
+    return RunResult(test_err=test_err, train_err=train_err,
+                     gen_gap=test_err - train_err, comm_pct=comm_pct,
+                     consensus_dist=cdist, history=history, params_avg=avg,
+                     workers=workers, seconds=time.time() - t0)
+
+
+def default_data(seed=0, **kw):
+    return classification_task(seed=seed, **kw)
+
+
+def csv(name, **kv):
+    print(name + "," + ",".join(f"{k}={v}" for k, v in kv.items()), flush=True)

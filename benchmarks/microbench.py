@@ -1,0 +1,78 @@
+"""Micro-benchmarks: us_per_call for the hot paths (fused pull-push vs
+naive, DPPF round vs DDP steps at equal token budget) on this host CPU.
+Wall-times are host-relative — the TPU story is §Roofline — but the
+RELATIVE comparison (fused consensus cost, round amortization) holds."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv, default_data, mlp_init, mlp_loss
+from repro.configs import DPPFConfig
+from repro.core import pullpush as pp
+from repro.optim import make_optimizer
+from repro.train import init_train_state, make_round_step, make_ddp_step
+from repro.train.trainer import TrainState
+
+
+def _time(fn, *args, n=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run():
+    # fused pull-push vs naive multi-pass
+    key = jax.random.PRNGKey(0)
+    stacked = {"w": jax.random.normal(key, (8, 1_000_000))}
+    fused = jax.jit(lambda s: pp.pullpush(s, 0.1, 0.5)[0])
+
+    def naive(s):
+        a = jax.tree.map(lambda x: jnp.mean(x, 0), s)
+        d = jax.tree.map(lambda x, c: x - c[None], s, a)
+        r = jnp.sqrt(sum(jnp.sum(jnp.square(l), axis=tuple(range(1, l.ndim)))
+                         for l in jax.tree.leaves(d)))
+        coef = 0.1 - 0.5 / jnp.maximum(r, 1e-12)
+        return jax.tree.map(lambda x, c: x + (c[None] - x) * coef.reshape(
+            (-1,) + (1,) * (x.ndim - 1)), s, a)
+
+    csv("microbench", op="pullpush_fused_8x1M",
+        us_per_call=round(_time(fused, stacked), 1))
+    csv("microbench", op="pullpush_naive_8x1M",
+        us_per_call=round(_time(jax.jit(naive), stacked), 1))
+
+    # DPPF round vs tau DDP steps at the same token budget
+    data = default_data()
+    opt = make_optimizer("sgd")
+    M, bs, tau = 4, 64, 4
+    dcfg = DPPFConfig(alpha=0.1, lam=0.5, tau=tau)
+    st = init_train_state(lambda k: mlp_init(k, data["dim"],
+                                             data["n_classes"]),
+                          opt, dcfg, M, key)
+    round_fn = jax.jit(make_round_step(mlp_loss, opt, dcfg, base_lr=0.05,
+                                       total_steps=100))
+    batch = {"x": jnp.zeros((tau, M, bs, data["dim"])),
+             "y": jnp.zeros((tau, M, bs), jnp.int32)}
+    us_round = _time(lambda s, b: round_fn(s, b)[0], st, batch)
+
+    p0 = mlp_init(key, data["dim"], data["n_classes"])
+    dstate = TrainState(params=p0, opt=opt.init(p0), cstate={},
+                        t=jnp.zeros((), jnp.int32))
+    ddp_fn = jax.jit(make_ddp_step(mlp_loss, opt, base_lr=0.05,
+                                   total_steps=100))
+    db = {"x": jnp.zeros((M, bs, data["dim"])),
+          "y": jnp.zeros((M, bs), jnp.int32)}
+    us_ddp = _time(lambda s, b: ddp_fn(s, b)[0], dstate, db)
+    csv("microbench", op=f"dppf_round_tau{tau}", us_per_call=round(us_round, 1),
+        derived=f"per_local_step={round(us_round / tau, 1)}")
+    csv("microbench", op="ddp_step", us_per_call=round(us_ddp, 1),
+        derived=f"tau_steps={round(us_ddp * tau, 1)}")
+
+
+if __name__ == "__main__":
+    run()

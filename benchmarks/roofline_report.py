@@ -1,0 +1,45 @@
+"""§Roofline: render the per-(arch x shape x mesh) roofline table from the
+dry-run JSON records (results/dryrun/). Reads only; run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import csv
+
+
+def load(out_dir="results/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(out_dir="results/dryrun"):
+    recs = load(out_dir)
+    if not recs:
+        csv("roofline", status="no dry-run records found; run repro.launch.dryrun")
+        return []
+    for r in recs:
+        t = r["roofline"]
+        coll = sum(v["bytes"] for v in r["collectives"].values())
+        csv("roofline",
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"], mode=r["mode"],
+            plan=r["plan"],
+            compute_s=f"{t['compute_s']:.3e}",
+            memory_s=f"{t['memory_s']:.3e}",
+            collective_s=f"{t['collective_s']:.3e}",
+            bottleneck=t["bottleneck"].replace("_s", ""),
+            flops_dev=f"{r['hlo_flops_per_dev']:.3e}",
+            coll_bytes_dev=f"{coll:.3e}",
+            useful_flop_ratio=round(r.get("useful_flop_ratio", 0.0), 3),
+            compile_s=r["compile_s"])
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Benchmark harness — one module per paper table/figure. Prints CSV lines
+``name,key=value,...`` per row. ``--fast`` shrinks budgets for CI; default
+budgets reproduce the qualitative paper orderings on CPU in ~10-20 min.
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--only table2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    fast = args.fast
+
+    from benchmarks import (
+        ablate_schedule, ablate_second_term, ablate_workers, d2_theorem2,
+        fig2_valley_collapse, microbench, roofline_report, table1_sharpness,
+        table2_comm, table3_softconsensus, table4_sam, table5_noniid,
+        theorem1_width,
+    )
+
+    suites = {
+        "microbench": lambda: microbench.run(),
+        "theorem1": lambda: theorem1_width.run(steps=200 if fast else 600),
+        "fig2": lambda: fig2_valley_collapse.run(steps=200 if fast else 600),
+        "table2": lambda: table2_comm.run(steps=150 if fast else 400),
+        "table3": lambda: table3_softconsensus.run(steps=150 if fast else 400),
+        "table4": lambda: table4_sam.run(steps=150 if fast else 400),
+        "table5": lambda: table5_noniid.run(rounds=8 if fast else 25),
+        "ablate_schedule": lambda: ablate_schedule.run(
+            steps=150 if fast else 400),
+        "ablate_second_term": lambda: ablate_second_term.run(
+            steps=150 if fast else 400),
+        "d2_theorem2": lambda: d2_theorem2.run(steps=150 if fast else 400),
+        "ablate_workers": lambda: ablate_workers.run(
+            steps=150 if fast else 400),
+        "table1": lambda: table1_sharpness.run(steps=120 if fast else 300),
+        "roofline": lambda: roofline_report.run(),
+    }
+    only = [s for s in args.only.split(",") if s]
+    failures = []
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:
+            failures.append(name)
+            print(f"# {name} FAILED: {e!r}", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Batched serving example: prefill a batch of prompts through the KV-cache
+engine and decode greedily — full-cache and sliding-window (long-context)
+variants on the gemma2 family (native local/global attention).
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    print("== full cache ==")
+    main(["--arch", "gemma2-2b", "--smoke", "--batch", "4",
+          "--prompt-len", "64", "--new-tokens", "16"])
+    print("\n== sliding-window ring buffer (sub-quadratic long-context) ==")
+    main(["--arch", "gemma2-2b", "--smoke", "--batch", "4",
+          "--prompt-len", "64", "--new-tokens", "16", "--window", "64"])
+    print("\n== recurrent-state serving (attention-free xLSTM) ==")
+    main(["--arch", "xlstm-350m", "--smoke", "--batch", "4",
+          "--prompt-len", "64", "--new-tokens", "16"])

@@ -1,0 +1,20 @@
+"""End-to-end driver: DPPF-train a language model from the assigned
+architecture pool for a few hundred steps and evaluate held-out loss.
+
+Default is a CPU-runnable reduced yi-6b (llama-family). For the ~100M-class
+run on real hardware, pass e.g.:
+  --d-model 768 --layers 12          (~110M params with the 64k vocab)
+
+  PYTHONPATH=src python examples/train_dppf_lm.py [--steps 200]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    defaults = ["--arch", "yi-6b", "--smoke", "--workers", "4",
+                "--tau", "4", "--alpha", "0.1", "--lam", "0.5",
+                "--steps", "200", "--ckpt", "results/dppf_lm.npz"]
+    # user args win
+    main(defaults + argv)

@@ -1,0 +1,97 @@
+"""Soft-consensus family (paper §3 Alg. 1, §7.1) and their DPPF couplings.
+
+Every method produces a consensus target x_C; the round update is
+    pull:  x_m <- (1-alpha) x_m + alpha x_C
+    push:  x_m <- x_m + lam (x_m - x_A)/||x_m - x_A||        (if DPPF)
+For simple_avg + push the two fuse into Eq. 5 (pullpush.pullpush).
+
+Methods:
+  simple_avg — x_C = x_A (soft LocalSGD; the paper's DPPF default)
+  hard       — x_C = x_A with alpha = 1 (LocalSGD, Stich'19)
+  easgd      — elastic center z: x_C = z; z <- z + beta * mean(x_m - z)
+  lsgd       — x_C = worker with lowest loss (Teng et al.'19)
+  mgrawa     — x_C = sum_m w_m x_m, w_m ∝ 1/||grad_m|| (Dimlioglu'24)
+  ddp        — no round-level consensus (per-step gradient averaging,
+               handled by the trainer); kept here for completeness.
+
+Remark 1 (paper): DPPF_lsgd with push away from x_A does NOT converge; the
+documented fix pushes away from the leader instead (push_from="leader").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pullpush as pp
+
+METHODS = ("simple_avg", "hard", "easgd", "lsgd", "mgrawa", "ddp")
+
+
+def init_state(method, stacked):
+    if method == "easgd":
+        return {"center": pp.tree_mean0(stacked)}
+    return {}
+
+
+def consensus_target(method, stacked, state, *, losses=None, grad_norms=None,
+                     easgd_beta=0.9):
+    """Returns (x_C tree [no worker dim] or stacked, new_state, leader_idx)."""
+    if method in ("simple_avg", "hard"):
+        return pp.tree_mean0(stacked), state, None
+    if method == "easgd":
+        z = state["center"]
+        xa = pp.tree_mean0(stacked)
+        z_new = jax.tree.map(
+            lambda zc, a: zc + easgd_beta * (a - zc), z, xa)
+        return z_new, {"center": z_new}, None
+    if method == "lsgd":
+        assert losses is not None, "lsgd needs per-worker losses"
+        idx = jnp.argmin(losses)
+        leader = jax.tree.map(lambda a: a.astype(jnp.float32)[idx], stacked)
+        return leader, state, idx
+    if method == "mgrawa":
+        assert grad_norms is not None, "mgrawa needs per-worker grad norms"
+        w = 1.0 / jnp.maximum(grad_norms, 1e-12)
+        w = w / jnp.sum(w)
+        target = jax.tree.map(
+            lambda a: jnp.tensordot(w, a.astype(jnp.float32), axes=(0, 0)),
+            stacked)
+        return target, state, None
+    raise ValueError(method)
+
+
+def apply_round(stacked, dcfg, lam_t, state, *, losses=None, grad_norms=None,
+                push_from="average"):
+    """One communication round. Returns (stacked, state, metrics)."""
+    method = dcfg.consensus
+    alpha = 1.0 if method == "hard" else dcfg.alpha
+
+    if method == "ddp":
+        return stacked, state, {"consensus_dist": pp.worker_dists(stacked).mean()}
+
+    if method == "simple_avg" and dcfg.push and not dcfg.exact_second_term \
+            and push_from == "average":
+        new, metrics = pp.pullpush(stacked, alpha, lam_t, dcfg.eps)
+        return new, state, metrics
+
+    target, state, leader_idx = consensus_target(
+        method, stacked, state, losses=losses, grad_norms=grad_norms)
+    new = pp.pull_only(stacked, target, alpha)
+
+    metrics = {}
+    if dcfg.push:
+        if dcfg.exact_second_term:
+            new = pp.exact_push(new, lam_t * pp.worker_dists(new).shape[0],
+                                dcfg.eps)
+        elif push_from == "leader" and leader_idx is not None:
+            leader = jax.tree.map(lambda a: a.astype(jnp.float32)[leader_idx], new)
+            new = pp.push_only(new, lam_t, center=leader, eps=dcfg.eps)
+        else:
+            new = pp.push_only(new, lam_t, eps=dcfg.eps)
+    r = pp.worker_dists(new)
+    metrics.update({
+        "consensus_dist": jnp.mean(r),
+        "pull_force": alpha * jnp.mean(pp.worker_dists(stacked)),
+        "push_force": jnp.float32(lam_t if dcfg.push else 0.0),
+    })
+    return new, state, metrics

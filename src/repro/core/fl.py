@@ -1,0 +1,143 @@
+"""Non-IID / Federated Learning substrate (paper §8.3, Table 5, §C.3):
+Dirichlet partitioning, SCAFFOLD (Karimireddy'20), FedLESAM (Fan'24), and
+their DPPF couplings (aggregation replaced by the Eq. 5 pull-push update;
+control variates / perturbations untouched).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pullpush as pp
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet non-IID partition (fixed at init, no reshuffling — §C.3)
+# ---------------------------------------------------------------------------
+
+def dirichlet_partition(labels, n_workers, alpha, seed=0):
+    """Split sample indices across workers with Dir(alpha) class skew.
+    Returns a list of index arrays (equal sizes, truncated)."""
+    rng = np.random.default_rng(seed)
+    labels = np.asarray(labels)
+    classes = np.unique(labels)
+    shards = [[] for _ in range(n_workers)]
+    for c in classes:
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet(alpha * np.ones(n_workers))
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for w, part in enumerate(np.split(idx, cuts)):
+            shards[w].extend(part.tolist())
+    size = min(len(s) for s in shards)
+    return [np.asarray(sorted(rng.permutation(s)[:size])) for s in shards]
+
+
+def heterogeneity(shards, labels, n_classes):
+    """Mean total-variation distance of shard label distributions from the
+    global distribution (diagnostic)."""
+    labels = np.asarray(labels)
+    glob = np.bincount(labels, minlength=n_classes) / len(labels)
+    tvs = []
+    for s in shards:
+        loc = np.bincount(labels[s], minlength=n_classes) / len(s)
+        tvs.append(0.5 * np.abs(loc - glob).sum())
+    return float(np.mean(tvs))
+
+
+# ---------------------------------------------------------------------------
+# FL rounds (vmapped across workers; stacked params)
+# ---------------------------------------------------------------------------
+
+def _zeros_like_tree(t):
+    return jax.tree.map(jnp.zeros_like, t)
+
+
+def init_fl_state(method, stacked):
+    """SCAFFOLD: server control c + per-worker controls c_m."""
+    st = {"x_prev_global": pp.tree_mean0(stacked)}
+    if method == "scaffold":
+        center = pp.tree_mean0(stacked)
+        st["c"] = _zeros_like_tree(center)
+        st["c_m"] = jax.tree.map(lambda a: jnp.zeros_like(a, jnp.float32), stacked)
+    return st
+
+
+def fl_round(method, loss_fn, stacked, state, batches, lr, *,
+             dppf=None, lam_t=0.0, rho=1e-3, eps=1e-12):
+    """One FL communication round.
+
+    batches: pytree of arrays with leading dims (tau, M, ...) — per local
+    step, per worker. Aggregation: FedAvg (dppf None) or DPPF Eq. 5.
+    Returns (stacked, state, metrics).
+    """
+    tau = jax.tree.leaves(batches)[0].shape[0]
+    grad_fn = jax.grad(loss_fn)
+    x_prev = state["x_prev_global"]
+
+    def _lesam_pert(x_m):
+        """Locally estimated global perturbation (Fan'24): direction of the
+        drift from the last round's global model, recomputed at the CURRENT
+        local iterate (zero at round start, grows as the worker drifts)."""
+        d = jax.tree.map(lambda c, a: c - a.astype(jnp.float32), x_prev, x_m)
+        n = jnp.sqrt(sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(d)))
+        return jax.tree.map(lambda l: rho * l / jnp.maximum(n, eps), d)
+
+    def local_step(x_m, batch_m, c_m=None, c=None, lesam=False):
+        if lesam:
+            pert = _lesam_pert(x_m)
+            x_eval = jax.tree.map(lambda a, e: a + e.astype(a.dtype), x_m, pert)
+        else:
+            x_eval = x_m
+        g = grad_fn(x_eval, batch_m)
+        if c_m is not None:  # SCAFFOLD correction
+            g = jax.tree.map(lambda gg, cm, cc: gg.astype(jnp.float32) - cm + cc,
+                             g, c_m, c)
+        return jax.tree.map(lambda a, gg: (a.astype(jnp.float32)
+                                           - lr * gg.astype(jnp.float32)
+                                           ).astype(a.dtype), x_m, g)
+
+    def run_worker(x_m, batches_m, c_m=None):
+        def body(x, b):
+            if method == "scaffold":
+                return local_step(x, b, c_m, state["c"]), None
+            if method == "fedlesam":
+                return local_step(x, b, lesam=True), None
+            return local_step(x, b), None
+        x_m, _ = jax.lax.scan(body, x_m,
+                              jax.tree.map(lambda a: a, batches_m))
+        return x_m
+
+    bt = jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), batches)  # (M, tau, ...)
+    if method == "scaffold":
+        new = jax.vmap(run_worker)(stacked, bt, state["c_m"])
+    else:
+        new = jax.vmap(run_worker)(stacked, bt)
+
+    # ---- aggregation -------------------------------------------------------
+    if dppf is not None and dppf.push:
+        new, metrics = pp.pullpush(new, dppf.alpha, lam_t, dppf.eps)
+    else:  # FedAvg: hard reset to the average
+        xa = pp.tree_mean0(new)
+        new = jax.tree.map(lambda a, c: jnp.broadcast_to(c[None], a.shape
+                                                         ).astype(a.dtype),
+                           new, xa)
+        metrics = {"consensus_dist": jnp.float32(0.0)}
+
+    # ---- control-variate update (SCAFFOLD option II) ------------------------
+    if method == "scaffold":
+        def cm_update(c_m, x_m_new):
+            # c_m+ = c_m - c + (x_prev - x_m_after_local)/(tau * lr)
+            return jax.tree.map(
+                lambda cm, cc, xp, xm: cm - cc + (xp - xm.astype(jnp.float32))
+                / (tau * lr),
+                c_m, state["c"], x_prev, x_m_new)
+        new_cm = jax.vmap(lambda cm, xm: cm_update(cm, xm))(state["c_m"], new)
+        state = dict(state)
+        state["c_m"] = new_cm
+        state["c"] = pp.tree_mean0(new_cm)
+
+    state = dict(state)
+    state["x_prev_global"] = pp.tree_mean0(new)
+    return new, state, metrics

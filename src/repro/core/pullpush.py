@@ -1,0 +1,154 @@
+"""DPPF pull-push updates (paper §5, Eq. 4/5; Appendix E.1, D.1).
+
+All functions operate on *worker-stacked* parameter pytrees: every leaf has
+a leading worker dimension M. On the production mesh that dimension is
+sharded over the worker axes, so ``jnp.mean(..., axis=0)`` here lowers to
+the round's single all-reduce — the only data-axis collective in DPPF.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Stacked-tree utilities
+# ---------------------------------------------------------------------------
+
+def tree_mean0(stacked):
+    """x_A: mean over the worker dimension (THE consensus collective)."""
+    return jax.tree.map(lambda a: jnp.mean(a.astype(jnp.float32), axis=0), stacked)
+
+
+def worker_sq_dists(stacked, center):
+    """||x_m - x_A||^2 per worker, summed over all leaves. -> (M,) fp32."""
+    def leaf(a, c):
+        d = a.astype(jnp.float32) - c[None]
+        return jnp.sum(jnp.square(d), axis=tuple(range(1, d.ndim)))
+    parts = jax.tree.leaves(jax.tree.map(leaf, stacked, center))
+    return jnp.sum(jnp.stack(parts), axis=0)
+
+
+def worker_dists(stacked, center=None):
+    """||x_m - x_A|| per worker -> (M,). This is the paper's relaxed MV
+    quantity (consensus distance, Fig. 2b)."""
+    if center is None:
+        center = tree_mean0(stacked)
+    return jnp.sqrt(worker_sq_dists(stacked, center))
+
+
+def _bcast(v, a):
+    """Broadcast a per-worker scalar (M,) over a stacked leaf (M, ...)."""
+    return v.reshape(v.shape + (1,) * (a.ndim - 1)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 5: fused pull-push (x_C = x_A)
+# ---------------------------------------------------------------------------
+
+def pullpush(stacked, alpha, lam, eps=1e-12):
+    """x_m <- x_m + (x_A - x_m) * (alpha - lam / ||x_m - x_A||).
+
+    Returns (new_stacked, metrics). One consensus all-reduce; the push term
+    adds no communication (the paper's D.1 simplification).
+    """
+    center = tree_mean0(stacked)
+    r = worker_dists(stacked, center)                      # (M,)
+    coef = alpha - lam / jnp.maximum(r, eps)               # (M,)
+
+    def leaf(a, c):
+        gap = c[None] - a.astype(jnp.float32)
+        return (a.astype(jnp.float32) + gap * _bcast(coef, a)).astype(a.dtype)
+
+    new = jax.tree.map(leaf, stacked, center)
+    # post-update distance: new gap = gap * (1 - coef), mean preserved
+    r_post = r * jnp.abs(1.0 - coef)
+    metrics = {
+        "consensus_dist": jnp.mean(r_post),     # relaxed MV, post-round
+        "pre_dist": jnp.mean(r),
+        "pull_force": alpha * jnp.mean(r),      # ||alpha * (x_A - x_m)||
+        "push_force": jnp.float32(lam),         # unit-normed * lam (Fig. 3)
+    }
+    return new, metrics
+
+
+def pull_only(stacked, target, alpha):
+    """Soft consensus x_m <- (1-alpha) x_m + alpha x_C.
+    ``target`` is either a center tree (no worker dim) or a stacked tree."""
+    def leaf(a, c):
+        cf = c.astype(jnp.float32)
+        if cf.ndim != a.ndim:
+            cf = cf[None]
+        return ((1.0 - alpha) * a.astype(jnp.float32) + alpha * cf).astype(a.dtype)
+    return jax.tree.map(leaf, stacked, target)
+
+
+def push_only(stacked, lam, center=None, eps=1e-12):
+    """x_m <- x_m + lam * (x_m - x_A)/||x_m - x_A|| (push force alone)."""
+    if center is None:
+        center = tree_mean0(stacked)
+    r = worker_dists(stacked, center)
+    scale = lam / jnp.maximum(r, eps)
+
+    def leaf(a, c):
+        d = a.astype(jnp.float32) - c[None]
+        return (a.astype(jnp.float32) + d * _bcast(scale, a)).astype(a.dtype)
+
+    return jax.tree.map(leaf, stacked, center)
+
+
+# ---------------------------------------------------------------------------
+# Exact two-term update (Appendix E.1 / ablation D.1)
+# ---------------------------------------------------------------------------
+
+def exact_push(stacked, lam_r, eps=1e-12):
+    """-lam_r dR/dx_m = (lam_r/M^2) (M u_m - sum_j u_j), u_m = d_m/||d_m||.
+
+    Keeps the second term the paper drops; needs the mean unit direction,
+    i.e. a second all-reduce (this is why the paper's simplification is the
+    communication-efficient choice)."""
+    center = tree_mean0(stacked)
+    r = worker_dists(stacked, center)
+    inv = 1.0 / jnp.maximum(r, eps)
+
+    def unit(a, c):
+        d = a.astype(jnp.float32) - c[None]
+        return d * _bcast(inv, a)
+
+    units = jax.tree.map(unit, stacked, center)
+    mean_unit = tree_mean0(units)                  # second collective
+    M = r.shape[0]
+
+    def leaf(a, u, mu):
+        upd = (lam_r / M) * (u - mu[None])
+        return (a.astype(jnp.float32) + upd).astype(a.dtype)
+
+    return jax.tree.map(leaf, stacked, units, mean_unit)
+
+
+def push_terms_norms(stacked, lam_r, eps=1e-12):
+    """(||T1||, ||T2||, ||T1+T2||) per worker — Figure 7 ablation."""
+    center = tree_mean0(stacked)
+    r = worker_dists(stacked, center)
+    inv = 1.0 / jnp.maximum(r, eps)
+
+    def unit(a, c):
+        d = a.astype(jnp.float32) - c[None]
+        return d * _bcast(inv, a)
+
+    units = jax.tree.map(unit, stacked, center)
+    mean_unit = tree_mean0(units)
+    M = r.shape[0]
+    t1 = jax.tree.map(lambda u: (lam_r / M) * u, units)
+    t2 = jax.tree.map(lambda mu: (lam_r / M) * mu, mean_unit)
+
+    def norm_stacked(tree):
+        parts = [jnp.sum(jnp.square(l), axis=tuple(range(1, l.ndim)))
+                 for l in jax.tree.leaves(tree)]
+        return jnp.sqrt(jnp.sum(jnp.stack(parts), axis=0))
+
+    n1 = norm_stacked(t1)
+    n2 = jnp.sqrt(sum(jnp.sum(jnp.square(l)) for l in jax.tree.leaves(t2)))
+    both = jax.tree.map(lambda a, b: a - b[None], t1, t2)
+    n12 = norm_stacked(both)
+    return n1, n2, n12

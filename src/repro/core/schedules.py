@@ -1,0 +1,36 @@
+"""Schedules: push strength lambda (paper §C.2), QSR communication period
+(Gu et al. 2024, §7.2), and cosine LR."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def lam_schedule(kind: str, lam: float, t, T):
+    """Paper §C.2. t: current iteration (traced ok), T: total iterations.
+    increasing (the paper's default for main results): flipped cosine."""
+    frac = jnp.clip(jnp.asarray(t, jnp.float32) / max(T, 1), 0.0, 1.0)
+    if kind == "fixed":
+        return jnp.full_like(frac, lam)
+    if kind == "decreasing":
+        return lam / 2.0 * (1.0 + jnp.cos(frac * math.pi))
+    if kind == "increasing":
+        return lam / 2.0 * (1.0 - jnp.cos(frac * math.pi))
+    raise ValueError(kind)
+
+
+def qsr_tau(eta_t: float, tau_base: int, beta: float) -> int:
+    """Quadratic Synchronization Rule: tau_t = max(tau_base, floor((beta/eta)^2)).
+    Host-side (python) — the trainer re-chunks rounds between compiles."""
+    if eta_t <= 0:
+        return tau_base
+    return max(tau_base, int((beta / eta_t) ** 2))
+
+
+def cosine_lr(base_lr: float, t, T, warmup: int = 0):
+    t = jnp.asarray(t, jnp.float32)
+    warm = base_lr * t / max(warmup, 1)
+    frac = jnp.clip((t - warmup) / max(T - warmup, 1), 0.0, 1.0)
+    cos = base_lr / 2.0 * (1.0 + jnp.cos(frac * math.pi))
+    return jnp.where(t < warmup, warm, cos)

@@ -1,0 +1,139 @@
+"""Sharpness measures compared against Inv. MV in paper Table 1 / B.1:
+Shannon entropy, epsilon-sharpness, Fisher-Rao, LPF, and Hessian-based
+(lambda_max / trace / Frobenius via HVP + Lanczos / Hutchinson).
+All take ``loss_fn(params, batch)`` and/or ``logit_fn(params, batch)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flat(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def _unflat(vec, tree):
+    out, i = [], 0
+    leaves, treedef = jax.tree.flatten(tree)
+    for l in leaves:
+        n = l.size
+        out.append(vec[i:i + n].reshape(l.shape).astype(l.dtype))
+        i += n
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+
+def shannon_entropy(logit_fn, params, batches):
+    """Negative mean output entropy (confident nets ~ overfit; B.1)."""
+    total, n = 0.0, 0
+    for b in batches:
+        p = jax.nn.softmax(logit_fn(params, b), axis=-1)
+        ent = -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-12)), axis=-1)
+        total += float(jnp.sum(ent))
+        n += int(np.prod(ent.shape))
+    return -total / max(n, 1)
+
+
+def eps_sharpness(loss_fn, params, batch, eps=1e-3, steps=5):
+    """Keskar'16-style: max loss in an eps-box via projected ascent,
+    normalized: (max - L) / (1 + L) * 100."""
+    l0 = float(loss_fn(params, batch))
+    grad_fn = jax.jit(jax.grad(loss_fn))
+    x = _flat(params)
+    box = eps * (jnp.abs(x) + 1.0)
+    pert = jnp.zeros_like(x)
+    for _ in range(steps):
+        g = _flat(grad_fn(_unflat(x + pert, params), batch))
+        pert = jnp.clip(pert + eps * jnp.sign(g) * box, -box, box)
+    lmax = float(loss_fn(_unflat(x + pert, params), batch))
+    return (lmax - l0) / (1.0 + l0) * 100.0
+
+
+def hvp_fn(loss_fn, params, batch):
+    g = lambda p: jax.grad(loss_fn)(p, batch)
+    def hvp(v_tree):
+        return jax.jvp(g, (params,), (v_tree,))[1]
+    return jax.jit(hvp)
+
+
+def fisher_rao(loss_fn, params, batch):
+    """<x, Hx> approximation of the Fisher-Rao norm (Liang'19)."""
+    hvp = hvp_fn(loss_fn, params, batch)
+    hx = hvp(params)
+    return float(sum(jnp.sum(a.astype(jnp.float32) * b.astype(jnp.float32))
+                     for a, b in zip(jax.tree.leaves(params),
+                                     jax.tree.leaves(hx))))
+
+
+def lpf(loss_fn, params, batch, key, sigma=0.01, mcmc=20):
+    """Low-pass-filtered loss (Bisla'22): E_{e~N(0, sigma I)} L(x + e)."""
+    x = _flat(params)
+    total = 0.0
+    for i in range(mcmc):
+        k = jax.random.fold_in(key, i)
+        e = sigma * jax.random.normal(k, x.shape)
+        total += float(loss_fn(_unflat(x + e, params), batch))
+    return total / mcmc
+
+
+def lanczos(hvp, dim, key, iters=20):
+    """Lanczos tridiagonalization of the Hessian (via HVP). Returns Ritz
+    values (approx extreme eigenvalues)."""
+    v = jax.random.normal(key, (dim,))
+    v = v / jnp.linalg.norm(v)
+    alphas, betas_l = [], []
+    v_prev = jnp.zeros_like(v)
+    beta = 0.0
+    vecs = []
+    for _ in range(iters):
+        vecs.append(v)
+        w = hvp(v)
+        alpha = float(jnp.dot(w, v))
+        w = w - alpha * v - beta * v_prev
+        # full reorthogonalization (small iters)
+        for u in vecs:
+            w = w - jnp.dot(w, u) * u
+        beta_new = float(jnp.linalg.norm(w))
+        alphas.append(alpha)
+        if beta_new < 1e-8:
+            break
+        betas_l.append(beta_new)
+        v_prev, v, beta = v, w / beta_new, beta_new
+    T = np.diag(alphas)
+    for i, b in enumerate(betas_l[:len(alphas) - 1]):
+        T[i, i + 1] = T[i + 1, i] = b
+    return np.linalg.eigvalsh(T)
+
+
+def hessian_measures(loss_fn, params, batch, key, lanczos_iters=20,
+                     hutchinson=8):
+    """lambda_max, trace, and Frobenius-norm estimates of the Hessian."""
+    hvp_tree = hvp_fn(loss_fn, params, batch)
+    x = _flat(params)
+    dim = x.shape[0]
+
+    def hvp_vec(v):
+        return _flat(hvp_tree(_unflat(v, params)))
+
+    ritz = lanczos(hvp_vec, dim, key, iters=lanczos_iters)
+    lam_max = float(ritz[-1])
+    # Hutchinson: trace = E[v^T H v]; frob^2 = E[||Hv||^2], v ~ Rademacher
+    tr, fr = 0.0, 0.0
+    for i in range(hutchinson):
+        k = jax.random.fold_in(key, 1000 + i)
+        v = jax.random.rademacher(k, (dim,), dtype=jnp.float32)
+        hv = hvp_vec(v)
+        tr += float(jnp.dot(v, hv))
+        fr += float(jnp.sum(hv * hv))
+    return {"lambda_max": lam_max, "trace": tr / hutchinson,
+            "frob": float(np.sqrt(fr / hutchinson))}
+
+
+def kendall_tau(a, b):
+    """Kendall rank correlation (paper Table 1 metric)."""
+    from scipy.stats import kendalltau
+    return float(kendalltau(np.asarray(a), np.asarray(b)).statistic)

@@ -1,0 +1,92 @@
+"""Theory validation utilities.
+
+Theorem 1: asymptotic valley width lam/alpha (+ O(eta*sigma + 1/sqrt(M))).
+Theorem 3 proof recurrence is simulated exactly in `width_recurrence`.
+Algorithm 3: 2D landscape scan around x_A via SVD of worker gap vectors
+(used for the Fig. 4/5 visualizations).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def predicted_width(alpha: float, lam: float) -> float:
+    """Theorem 1 limit."""
+    return lam / alpha
+
+
+def width_upper_bound(alpha, lam, eta, tau, sigma0, M):
+    """Eq. 22 of the proof: the full finite-M, finite-eta bound."""
+    beta = eta * (1 - alpha) * np.sqrt(tau) * sigma0 * np.sqrt((M + 1) / M)
+    gamma = lam * (1 + 1 / np.sqrt(M))
+    return (beta + gamma) / alpha
+
+
+def width_recurrence(alpha, lam, eta, tau, sigma0, M, d=64, rounds=500,
+                     seed=0):
+    """Simulate the gap recurrence (proof Eq. 16) on random-walk workers:
+    Delta+_{k} = (1-a) Delta+_{k-1} - eta (1-a) Z + lam u_m - lam u_bar.
+    Returns the empirical ||Delta+|| trajectory mean over workers."""
+    rng = np.random.default_rng(seed)
+    delta = np.zeros((M, d))
+    traj = []
+    for _ in range(rounds):
+        # local drift: Z_m = Gbar - G_m with G_m ~ N(0, tau sigma0^2 I)
+        G = rng.normal(0.0, sigma0 * np.sqrt(tau), size=(M, d))
+        Z = G.mean(0, keepdims=True) - G
+        drift = delta - eta * Z
+        norms = np.linalg.norm(drift, axis=1, keepdims=True)
+        u = np.where(norms > 1e-12, drift / np.maximum(norms, 1e-12),
+                     rng.normal(size=(M, d)) / np.sqrt(d))
+        u = u / np.maximum(np.linalg.norm(u, axis=1, keepdims=True), 1e-12)
+        delta = (1 - alpha) * drift + lam * u - lam * u.mean(0, keepdims=True)
+        # re-center (gap is relative to the average)
+        delta = delta - delta.mean(0, keepdims=True)
+        traj.append(np.linalg.norm(delta, axis=1).mean())
+    return np.asarray(traj)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3: landscape visualization scan
+# ---------------------------------------------------------------------------
+
+def _flat(tree):
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32)
+                            for l in jax.tree.leaves(tree)])
+
+
+def _unflat(vec, tree):
+    out, i = [], 0
+    leaves, treedef = jax.tree.flatten(tree)
+    for l in leaves:
+        out.append(vec[i:i + l.size].reshape(l.shape).astype(l.dtype))
+        i += l.size
+    return jax.tree.unflatten(treedef, out)
+
+
+def landscape_scan(eval_fn, workers, *, lim=1.0, step=0.25):
+    """Algorithm 3. eval_fn(params) -> scalar (loss or error %).
+
+    Returns dict with the grid, the 2D scan values, and each worker's
+    projected coordinates on the SVD plane centered at x_A."""
+    M = len(workers)
+    flats = np.stack([np.asarray(_flat(w)) for w in workers])
+    x_a = flats.mean(0)
+    gaps = flats - x_a[None]
+    # top-2 right singular vectors of the gap matrix
+    _, _, vt = np.linalg.svd(gaps, full_matrices=False)
+    v1, v2 = vt[0], vt[1] if vt.shape[0] > 1 else (vt[0], vt[0])
+    coords = np.stack([gaps @ v1, gaps @ v2], axis=1)  # (M, 2)
+
+    grid = np.arange(-lim, lim + step / 2, step)
+    scan = np.zeros((len(grid), len(grid)))
+    template = workers[0]
+    eval_jit = jax.jit(eval_fn)
+    for i, a in enumerate(grid):
+        for j, b in enumerate(grid):
+            p = _unflat(jnp.asarray(x_a + a * v1 + b * v2), template)
+            scan[i, j] = float(eval_jit(p))
+    return {"grid": grid, "scan": scan, "worker_coords": coords,
+            "dirs": (v1, v2)}

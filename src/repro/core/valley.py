@@ -1,0 +1,65 @@
+"""Mean Valley / Inverse Mean Valley sharpness measure (paper §4, Alg. 2).
+
+Offline analysis tool: given converged worker parameters, line-search from
+the average x_A along each worker direction until the train loss reaches
+kappa * L_A; MV is the mean boundary distance, Inv. MV its additive inverse.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normalize_params(tree):
+    """Scale-invariance normalization (paper B.1, following Bisla'22):
+    every leaf is rescaled to unit Frobenius norm (norm-1 leaves left as-is
+    guards: zero leaves untouched)."""
+    def leaf(a):
+        n = jnp.sqrt(jnp.sum(jnp.square(a.astype(jnp.float32))))
+        return jnp.where(n > 0, a / n, a).astype(a.dtype)
+    return jax.tree.map(leaf, tree)
+
+
+def _axpy(x, d, t):
+    return jax.tree.map(lambda a, b: (a.astype(jnp.float32)
+                                      + t * b.astype(jnp.float32)), x, d)
+
+
+def _tree_norm(t):
+    return float(jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                              for l in jax.tree.leaves(t))))
+
+
+def mean_valley(loss_fn, workers, *, kappa=2.0, step=0.1, max_steps=200,
+                normalize=False):
+    """Algorithm 2. ``workers``: list of parameter pytrees (one per worker);
+    ``loss_fn(params) -> scalar`` evaluates the train loss (full data or a
+    fixed large batch). Returns dict with mv, inv_mv, per-worker betas.
+    """
+    if normalize:
+        workers = [normalize_params(w) for w in workers]
+    M = len(workers)
+    x_a = jax.tree.map(lambda *ls: sum(l.astype(jnp.float32) for l in ls) / M,
+                       *workers)
+    l_a = float(loss_fn(x_a))
+    target = kappa * l_a
+    loss_jit = jax.jit(loss_fn)
+
+    betas = []
+    for w in workers:
+        d = jax.tree.map(lambda a, c: a.astype(jnp.float32) - c, w, x_a)
+        n = _tree_norm(d)
+        if n == 0.0:
+            betas.append(0.0)
+            continue
+        d = jax.tree.map(lambda a: a / n, d)
+        beta = 0.0
+        for _ in range(max_steps):
+            beta += step
+            if float(loss_jit(_axpy(x_a, d, beta))) >= target:
+                break
+        betas.append(beta)
+    mv = float(np.mean(betas))
+    return {"mv": mv, "inv_mv": -mv, "betas": betas, "loss_at_avg": l_a,
+            "kappa": kappa}

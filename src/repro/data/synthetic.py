@@ -1,0 +1,107 @@
+"""Deterministic synthetic data pipelines.
+
+LM task: a learnable affine-recurrence token stream — worker shards are
+disjoint by construction (stateless PRNG keyed by (worker, step)), matching
+the paper's exclusive-shard setup (Alg. 1). Every batch is reproducible
+from (seed, worker, step) with no pipeline state, which is what makes the
+multi-pod input pipeline trivially resumable.
+
+Classification task: Gaussian clusters with class-dependent means — the
+CPU-scale stand-in for CIFAR in the paper-table benchmarks, with a held-out
+test split so generalization gaps are measurable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# LM token stream
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TokenTask:
+    vocab_size: int
+    seq_len: int
+    mult: int = 31
+    add: int = 17
+    noise: float = 0.05
+
+    def sample(self, key, batch):
+        """(batch, seq) token sequences following a noisy affine recurrence
+        t_{i+1} = (mult * t_i + add) mod V  — learnable next-token structure."""
+        k1, k2, k3 = jax.random.split(key, 3)
+        start = jax.random.randint(k1, (batch,), 0, self.vocab_size)
+
+        def step(tok, k):
+            nxt = (tok * self.mult + self.add) % self.vocab_size
+            flip = jax.random.bernoulli(k, self.noise, (batch,))
+            rnd = jax.random.randint(jax.random.fold_in(k, 1), (batch,),
+                                     0, self.vocab_size)
+            nxt = jnp.where(flip, rnd, nxt)
+            return nxt, nxt
+
+        keys = jax.random.split(k2, self.seq_len - 1)
+        _, rest = jax.lax.scan(step, start, keys)
+        toks = jnp.concatenate([start[None], rest], axis=0).T
+        del k3
+        return toks.astype(jnp.int32)
+
+
+def make_lm_batch(task: TokenTask, seed: int, worker: int, step: int, batch: int,
+                  cfg=None):
+    """Deterministic per-(worker, step) batch; shards never overlap because
+    the key space is partitioned by worker id."""
+    key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed),
+                                                worker), step)
+    toks = task.sample(key, batch)
+    labels = jnp.roll(toks, -1, axis=1).at[:, -1].set(-1)
+    out = {"tokens": toks, "labels": labels}
+    if cfg is not None and cfg.n_prefix and not cfg.n_enc_layers:
+        out["prefix"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 7), (batch, cfg.n_prefix, cfg.d_model))
+    if cfg is not None and cfg.n_enc_layers:
+        out["enc"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(key, 8), (batch, cfg.n_prefix, cfg.d_model))
+    return out
+
+
+def make_round_batch(task: TokenTask, seed: int, n_workers: int, tau: int,
+                     round_idx: int, local_batch: int, cfg=None):
+    """Stacked round input (tau, M, B, S) for the fused DPPF round step."""
+    def one(t, m):
+        return make_lm_batch(task, seed, m, round_idx * tau + t, local_batch,
+                             cfg)
+    rows = [[one(t, m) for m in range(n_workers)] for t in range(tau)]
+    stacked_rows = [jax.tree.map(lambda *xs: jnp.stack(xs), *row) for row in rows]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *stacked_rows)
+
+
+# ---------------------------------------------------------------------------
+# Classification task (CIFAR stand-in for the paper tables)
+# ---------------------------------------------------------------------------
+
+def classification_task(n_train=2048, n_test=1024, dim=32, n_classes=10,
+                        noise=1.8, label_noise=0.15, seed=0):
+    """Gaussian clusters with feature noise + TRAIN-set label noise.
+    Label noise creates a memorization regime: models overfit the flipped
+    labels, so generalization gaps are visible and flatness matters —
+    the CPU stand-in for the paper's CIFAR setting."""
+    rng = np.random.default_rng(seed)
+    means = rng.normal(0.0, 1.0, size=(n_classes, dim))
+    def draw(n, flip):
+        y = rng.integers(0, n_classes, size=n)
+        x = means[y] + noise * rng.normal(size=(n, dim))
+        if flip > 0:
+            mask = rng.random(n) < flip
+            y = np.where(mask, rng.integers(0, n_classes, size=n), y)
+        return x.astype(np.float32), y.astype(np.int32)
+    xtr, ytr = draw(n_train, label_noise)
+    xte, yte = draw(n_test, 0.0)
+    return {"x_train": jnp.asarray(xtr), "y_train": jnp.asarray(ytr),
+            "x_test": jnp.asarray(xte), "y_test": jnp.asarray(yte),
+            "n_classes": n_classes, "dim": dim}

@@ -1,0 +1,5 @@
+from repro.kernels.mamba_scan.mamba_scan import ssd_chunks
+from repro.kernels.mamba_scan.ops import ssd_scan
+from repro.kernels.mamba_scan.ref import chunk_ref, ssd_chunks_ref
+
+__all__ = ["chunk_ref", "ssd_chunks", "ssd_chunks_ref", "ssd_scan"]

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk computation.
+
+Grid (B, H, nc): each step processes one (batch, head, chunk) tile entirely
+in VMEM — x (L, P), B/C (L, N), a_log (L,) — and emits the intra-chunk
+output (L, P) plus the chunk state (P, N). Both contractions are dense
+(L x L) @ (L x P) and (N x L) @ (L x P) matmuls on the MXU; with the
+default L = 128, N = 64..128, P = 64..128 the working set is < 1 MiB.
+
+The sequential inter-chunk state recurrence (a length-nc scan over tiny
+(P, N) states) stays in jnp — it is latency-, not bandwidth-, bound and
+does not benefit from a kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(x_ref, b_ref, c_ref, a_ref, y_ref, st_ref, *, L):
+    x = x_ref[0, 0, 0].astype(jnp.float32)          # (L, P)
+    B_ = b_ref[0, 0].astype(jnp.float32)            # (L, N)
+    C_ = c_ref[0, 0].astype(jnp.float32)            # (L, N)
+    a = a_ref[0, 0, 0].astype(jnp.float32)          # (L,)
+
+    la = jnp.cumsum(a)
+    seg = la[:, None] - la[None, :]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    seg = jnp.where(causal, seg, NEG_INF)
+    decay = jnp.exp(seg)
+    G = jax.lax.dot_general(C_, B_, (((1,), (1,)), ((), ())))   # (L, L)
+    y = jax.lax.dot_general(G * decay, x, (((1,), (0,)), ((), ())))
+    rem = jnp.exp(la[L - 1] - la)                   # (L,)
+    st = jax.lax.dot_general(x, B_ * rem[:, None],
+                             (((0,), (0,)), ((), ())))          # (P, N)
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+    st_ref[0, 0, 0] = st.astype(st_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunks(x, B_, C_, a_log, *, interpret=True):
+    """x: (B, H, nc, L, P); B_, C_: (B, nc, L, N); a_log: (B, H, nc, L).
+    Returns (y (B, H, nc, L, P), states (B, H, nc, P, N))."""
+    Bt, H, nc, L, P = x.shape
+    N = B_.shape[-1]
+    kernel = functools.partial(_kernel, L=L)
+    y, st = pl.pallas_call(
+        kernel,
+        grid=(Bt, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, L, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, L, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda b, h, c: (b, h, c, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bt, H, nc, L, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bt, H, nc, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, B_, C_, a_log)
+    return y, st

@@ -1,0 +1,41 @@
+"""jit'd wrapper: full chunked SSD scan (kernel intra-chunk + jnp
+inter-chunk recurrence). Mirrors repro.models.ssm._ssd_chunked semantics."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mamba_scan.mamba_scan import ssd_chunks
+from repro.kernels.mamba_scan.ref import ssd_chunks_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel", "interpret"))
+def ssd_scan(x, B_, C_, a_log, *, use_kernel=True, interpret=True):
+    """x: (B, H, nc, L, P); B_, C_: (B, nc, L, N); a_log: (B, H, nc, L).
+    Full scan: returns y including cross-chunk contributions, final state."""
+    if use_kernel:
+        y_intra, states = ssd_chunks(x, B_, C_, a_log, interpret=interpret)
+    else:
+        y_intra, states = ssd_chunks_ref(x, B_, C_, a_log)
+
+    la = jnp.cumsum(a_log, axis=-1)                 # (B, H, nc, L)
+    chunk_decay = jnp.exp(la[..., -1])              # (B, H, nc)
+
+    def body(h_prev, xs):
+        st, dc, C_c, la_c = xs
+        # (B, L, N) x (B, H, P, N) x (B, H, L) -> (B, H, L, P)
+        y_int = jnp.einsum("bln,bhpn,bhl->bhlp", C_c, h_prev, jnp.exp(la_c))
+        h_new = dc[..., None, None] * h_prev + st
+        return h_new, y_int
+
+    Bt, H, nc = a_log.shape[:3]
+    N = B_.shape[-1]
+    P = x.shape[-1]
+    h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    xs = (states.transpose(2, 0, 1, 3, 4), chunk_decay.transpose(2, 0, 1),
+          C_.transpose(1, 0, 2, 3), la.transpose(2, 0, 1, 3))
+    h_final, y_inter = jax.lax.scan(body, h0, xs)
+    y = y_intra + y_inter.transpose(1, 2, 0, 3, 4)
+    return y, h_final

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the Mamba2 SSD intra-chunk kernel.
+
+Per (batch, head, chunk) with chunk length L, state dim N, head dim P:
+  la          = cumsum(a_log) within the chunk                  (L,)
+  y_intra[t]  = sum_{s<=t} exp(la_t - la_s) * (C_t . B_s) * x_s (L, P)
+  state       = sum_s exp(la_L - la_s) * B_s (x) x_s            (P, N)
+(the inter-chunk recurrence over states is cheap and stays in jnp).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def chunk_ref(x, B_, C_, a_log):
+    """x: (L, P); B_, C_: (L, N); a_log: (L,) -> (y (L, P), state (P, N))."""
+    L = x.shape[0]
+    la = jnp.cumsum(a_log)
+    seg = la[:, None] - la[None, :]                 # (t, s)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    seg = jnp.where(causal, seg, NEG_INF)
+    decay = jnp.exp(seg)
+    G = C_ @ B_.T                                   # (t, s)
+    y = (G * decay) @ x                             # (L, P)
+    rem = jnp.exp(la[-1] - la)                      # (L,)
+    state = (B_ * rem[:, None]).T @ x               # (N, P) -> transpose
+    return y, state.T
+
+
+def ssd_chunks_ref(x, B_, C_, a_log):
+    """Batched oracle. x: (B, H, nc, L, P); B_, C_: (B, nc, L, N);
+    a_log: (B, H, nc, L). Returns (y like x, states (B, H, nc, P, N))."""
+    import jax
+    def per_bh(xh, al, Bb, Cb):
+        def per_chunk(xc, ac, bc, cc):
+            return chunk_ref(xc, bc, cc, ac)
+        return jax.vmap(per_chunk)(xh, al, Bb, Cb)
+    def per_b(xb, ab, Bb, Cb):
+        return jax.vmap(lambda xh, ah: per_bh(xh, ah, Bb, Cb))(xb, ab)
+    return jax.vmap(per_b)(x, a_log, B_, C_)

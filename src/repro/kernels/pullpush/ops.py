@@ -1,0 +1,56 @@
+"""jit'd public wrapper: fused DPPF consensus over worker-stacked pytrees.
+
+``pullpush_kernel(stacked, alpha, lam)`` mirrors
+``repro.core.pullpush.pullpush`` but routes the flat per-worker math through
+the Pallas kernels (interpret=True on CPU; compiled on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pullpush import pullpush as k
+from repro.kernels.pullpush import ref
+
+
+def _flatten_workers(stacked):
+    """(M, n) flat view + unflatten closure."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    M = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [l.reshape(M, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+    def unflatten(flat_new):
+        out, i = [], 0
+        for l in leaves:
+            n = l[0].size
+            out.append(flat_new[:, i:i + n].reshape(l.shape).astype(l.dtype))
+            i += n
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def pullpush_fused(stacked, alpha, lam, eps=1e-12, *, interpret=True,
+                   use_kernel=True):
+    """Eq. 5 over a worker-stacked pytree via the Pallas kernels.
+    Returns (new_stacked, per-worker distances)."""
+    flat, unflatten = _flatten_workers(stacked)
+    a = jnp.mean(flat, axis=0)  # consensus all-reduce
+
+    if use_kernel:
+        sq = jax.vmap(lambda x: k.sq_dist(x, a, interpret=interpret))(flat)
+    else:
+        sq = jax.vmap(lambda x: ref.sq_dist_ref(x, a))(flat)
+    r = jnp.sqrt(sq)
+    coef = alpha - lam / jnp.maximum(r, eps)
+
+    if use_kernel:
+        new = jax.vmap(lambda x, c: k.apply_update(x, a, c,
+                                                   interpret=interpret))(flat, coef)
+    else:
+        new = jax.vmap(lambda x, c: ref.apply_ref(x, a, c))(flat, coef)
+    return unflatten(new), r

@@ -1,0 +1,102 @@
+"""Pallas TPU kernel for the fused DPPF pull-push consensus update.
+
+DPPF's consensus is memory-bound: it touches every parameter of every
+worker once for the distance and once for the update. The TPU-native
+formulation (DESIGN.md §5):
+
+  phase 1 (sq_dist): grid over row blocks of the (rows, 128) padded view;
+    each step accumulates a partial sum-of-squares into an SMEM scalar
+    accumulator — one HBM read of x and a.
+  phase 2 (apply): one fused read-modify-write pass computing
+    x + (a - x) * coef with the scalar coef prefetched.
+
+Block shape (BLOCK_ROWS, 128) keeps the working set in VMEM and the lane
+dimension hardware-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+BLOCK_ROWS = 256  # 256*128*4B*2 tensors = 256 KiB of VMEM per step
+
+
+def _sq_dist_kernel(x_ref, a_ref, o_ref):
+    # the (1,) output block maps to the same slot every grid step, so it
+    # acts as the cross-step accumulator (standard revisiting pattern).
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[0] = jnp.float32(0.0)
+
+    d = x_ref[...].astype(jnp.float32) - a_ref[...].astype(jnp.float32)
+    o_ref[0] += jnp.sum(d * d)
+
+
+def _apply_kernel(coef_ref, x_ref, a_ref, o_ref):
+    xf = x_ref[...].astype(jnp.float32)
+    af = a_ref[...].astype(jnp.float32)
+    o_ref[...] = (xf + (af - xf) * coef_ref[0]).astype(o_ref.dtype)
+
+
+def _pad_view(x):
+    n = x.shape[0]
+    rows = -(-n // LANE)
+    pad = rows * LANE - n
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    return xp.reshape(rows, LANE), n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sq_dist(x, a, *, interpret=True):
+    """||x - a||^2 via the blockwise reduction kernel. x, a: (n,)."""
+    xv, _ = _pad_view(x)
+    av, _ = _pad_view(a)
+    rows = xv.shape[0]
+    grid = -(-rows // BLOCK_ROWS)
+    if rows % BLOCK_ROWS:
+        pad_r = grid * BLOCK_ROWS - rows
+        xv = jnp.pad(xv, ((0, pad_r), (0, 0)))
+        av = jnp.pad(av, ((0, pad_r), (0, 0)))
+    out = pl.pallas_call(
+        _sq_dist_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=interpret,
+    )(xv, av)
+    return out[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def apply_update(x, a, coef, *, interpret=True):
+    """out = x + (a - x) * coef in one fused pass. x, a: (n,)."""
+    xv, n = _pad_view(x)
+    av, _ = _pad_view(a)
+    rows = xv.shape[0]
+    grid = -(-rows // BLOCK_ROWS)
+    if rows % BLOCK_ROWS:
+        pad_r = grid * BLOCK_ROWS - rows
+        xv = jnp.pad(xv, ((0, pad_r), (0, 0)))
+        av = jnp.pad(av, ((0, pad_r), (0, 0)))
+    coef = jnp.asarray(coef, jnp.float32).reshape(1)
+    out = pl.pallas_call(
+        _apply_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xv.shape, x.dtype),
+        interpret=interpret,
+    )(coef, xv, av)
+    return out.reshape(-1)[:n]

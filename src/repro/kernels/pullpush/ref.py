@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused DPPF pull-push consensus kernel.
+
+Semantics (paper Eq. 5, per worker, flat parameter vector):
+    r    = ||x - a||_2
+    coef = alpha - lam / max(r, eps)
+    out  = x + (a - x) * coef
+The naive jnp version issues >= 4 HBM passes over x (sub, square-reduce,
+then read x and a again for the update); the Pallas kernel fuses each phase
+into a single pass (see pullpush.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sq_dist_ref(x, a):
+    """Sum of squared differences, fp32 accumulation. x, a: (n,)."""
+    d = x.astype(jnp.float32) - a.astype(jnp.float32)
+    return jnp.sum(d * d)
+
+
+def apply_ref(x, a, coef):
+    """out = x + (a - x) * coef (coef scalar, fp32 math, cast back)."""
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    return (xf + (af - xf) * coef).astype(x.dtype)
+
+
+def pullpush_ref(x, a, alpha, lam, eps=1e-12):
+    r = jnp.sqrt(sq_dist_ref(x, a))
+    coef = alpha - lam / jnp.maximum(r, eps)
+    return apply_ref(x, a, coef), r

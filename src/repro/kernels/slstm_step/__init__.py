@@ -1,0 +1,5 @@
+from repro.kernels.slstm_step.ops import slstm_scan
+from repro.kernels.slstm_step.ref import slstm_steps_ref
+from repro.kernels.slstm_step.slstm_step import slstm_steps
+
+__all__ = ["slstm_scan", "slstm_steps", "slstm_steps_ref"]

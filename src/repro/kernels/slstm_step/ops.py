@@ -1,0 +1,30 @@
+"""jit'd wrapper: pads T to the block size, runs the kernel or the oracle.
+Padding uses i = -inf (no write) and f = 0 (identity decay) gate values so
+padded steps leave the state untouched; padded h rows are discarded."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.slstm_step.ref import slstm_steps_ref
+from repro.kernels.slstm_step.slstm_step import T_BLK, slstm_steps
+
+
+@functools.partial(jax.jit, static_argnames=("t_blk", "use_kernel",
+                                             "interpret"))
+def slstm_scan(g_in, R, state, *, t_blk=T_BLK, use_kernel=True,
+               interpret=True):
+    """g_in: (B, T, H, 4P); R: (H, P, 4P); state: (c, n, h, m) (B, H, P)."""
+    if not use_kernel:
+        return slstm_steps_ref(g_in, R, state)
+    B, T, H, P4 = g_in.shape
+    P = P4 // 4
+    t_blk = min(t_blk, T)
+    pad = (-T) % t_blk
+    if pad:
+        g_in = jnp.pad(g_in, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    out, st = slstm_steps(g_in, R, state, t_blk=t_blk, t_valid=T,
+                          interpret=interpret)
+    return out[:, :T], st

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the sLSTM recurrence kernel.
+
+Inputs: pre-computed input gate projections g_in (B, T, H, 4P), recurrent
+block-diagonal weights R (H, P, 4P), state (c, n, h, m) each (B, H, P).
+Per step (exponential gating with the standard max-stabilizer):
+    g  = g_in[t] + h @ R            -> split z, i, f, o  (P each)
+    m' = max(f + m, i);  ie = exp(i - m');  fe = exp(f + m - m')
+    c  = fe c + ie tanh(z);  n = fe n + ie
+    h  = sigmoid(o) * c / max(n, 1e-6)
+Matches repro.models.xlstm.slstm_forward's inner scan exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def slstm_steps_ref(g_in, R, state):
+    """g_in: (B, T, H, 4P); R: (H, P, 4P); state: (c, n, h, m) (B, H, P).
+    Returns (h_out (B, T, H, P), final state)."""
+    B, T, H, P4 = g_in.shape
+    P = P4 // 4
+
+    def step(carry, g_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhp,hpq->bhq", h, R)
+        g = g_t + rec
+        z_r, i_r, f_r, o_r = jnp.split(g, 4, axis=-1)
+        m_new = jnp.maximum(f_r + m, i_r)
+        ie = jnp.exp(i_r - m_new)
+        fe = jnp.exp(f_r + m - m_new)
+        c = fe * c + ie * jnp.tanh(z_r)
+        n = fe * n + ie
+        h_new = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, g_in.transpose(1, 0, 2, 3))
+    return hs.transpose(1, 0, 2, 3), state

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel for the sLSTM recurrence with VMEM-pinned recurrent
+weights.
+
+The faithful per-timestep scan re-streams the per-head recurrent matrix
+R (P, 4P) from HBM every step — the dominant memory term of the xlstm
+prefill/train roofline after the mLSTM was chunked (EXPERIMENTS.md §Perf
+pair 1, iteration 2). The sLSTM h-recurrence is nonlinear so the TIME loop
+cannot be parallelized exactly; but R is loop-invariant, so the kernel
+processes T_BLK timesteps per grid step with R resident in VMEM:
+
+  grid (B, H, T/T_BLK); per step: R tile (P, 4P) + gate block (T_BLK, 4P)
+  in VMEM, fori over T_BLK recurrence steps on (P,) vectors, state carried
+  across T grid steps in VMEM scratch.
+
+R traffic drops by T_BLK (e.g. 128x): per layer at T=32k, P=512, H=4:
+524 GB -> 4 GB. VMEM: R 4 MiB + gates 1 MiB + states ~10 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+T_BLK = 128
+
+
+def _kernel(g_ref, r_ref, c0_ref, n0_ref, h0_ref, m0_ref,
+            out_ref, cf_ref, nf_ref, hf_ref, mf_ref,
+            c_s, n_s, h_s, m_s, *, t_blk, P, t_valid):
+    jt = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(jt == 0)
+    def _init():
+        c_s[...] = c0_ref[0, 0]
+        n_s[...] = n0_ref[0, 0]
+        h_s[...] = h0_ref[0, 0]
+        m_s[...] = m0_ref[0, 0]
+
+    R = r_ref[0].astype(jnp.float32)                 # (P, 4P) resident
+
+    def step(t, carry):
+        c, n, h, m = carry
+        g = g_ref[0, t, 0].astype(jnp.float32)       # (4P,)
+        rec = jax.lax.dot_general(h[None, :], R,
+                                  (((1,), (0,)), ((), ())))[0]
+        g = g + rec
+        z_r, i_r = g[:P], g[P:2 * P]
+        f_r, o_r = g[2 * P:3 * P], g[3 * P:]
+        m_new = jnp.maximum(f_r + m, i_r)
+        ie = jnp.exp(i_r - m_new)
+        fe = jnp.exp(f_r + m - m_new)
+        c_new = fe * c + ie * jnp.tanh(z_r)
+        n_new = fe * n + ie
+        h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1e-6)
+        out_ref[0, t, 0] = h_new.astype(out_ref.dtype)
+        # padded tail steps must leave the state untouched
+        valid = jt * t_blk + t < t_valid
+        keep = lambda new, old: jnp.where(valid, new, old)
+        return (keep(c_new, c), keep(n_new, n), keep(h_new, h),
+                keep(m_new, m))
+
+    carry = (c_s[...], n_s[...], h_s[...], m_s[...])
+    c, n, h, m = jax.lax.fori_loop(0, t_blk, step, carry)
+    c_s[...], n_s[...], h_s[...], m_s[...] = c, n, h, m
+
+    @pl.when(jt == nt - 1)
+    def _finalize():
+        cf_ref[0, 0] = c
+        nf_ref[0, 0] = n
+        hf_ref[0, 0] = h
+        mf_ref[0, 0] = m
+
+
+@functools.partial(jax.jit, static_argnames=("t_blk", "t_valid", "interpret"))
+def slstm_steps(g_in, R, state, *, t_blk=T_BLK, t_valid=None, interpret=True):
+    """g_in: (B, T, H, 4P) fp32; R: (H, P, 4P); state: (c, n, h, m) each
+    (B, H, P). Returns (h_out (B, T, H, P), final state). T must be padded
+    to a multiple of t_blk by the caller (ops.py handles it); ``t_valid``
+    marks the unpadded length (state updates stop there)."""
+    B, T, H, P4 = g_in.shape
+    P = P4 // 4
+    assert T % t_blk == 0, (T, t_blk)
+    c0, n0, h0, m0 = state
+    kernel = functools.partial(_kernel, t_blk=t_blk, P=P,
+                               t_valid=t_valid if t_valid is not None else T)
+    grid = (B, H, T // t_blk)
+    out, cf, nf, hf, mf = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t_blk, 1, P4), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, P, P4), lambda b, h, t: (h, 0, 0)),
+            pl.BlockSpec((1, 1, P), lambda b, h, t: (b, h, 0)),
+            pl.BlockSpec((1, 1, P), lambda b, h, t: (b, h, 0)),
+            pl.BlockSpec((1, 1, P), lambda b, h, t: (b, h, 0)),
+            pl.BlockSpec((1, 1, P), lambda b, h, t: (b, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, t_blk, 1, P), lambda b, h, t: (b, t, h, 0)),
+            pl.BlockSpec((1, 1, P), lambda b, h, t: (b, h, 0)),
+            pl.BlockSpec((1, 1, P), lambda b, h, t: (b, h, 0)),
+            pl.BlockSpec((1, 1, P), lambda b, h, t: (b, h, 0)),
+            pl.BlockSpec((1, 1, P), lambda b, h, t: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((P,), jnp.float32),
+            pltpu.VMEM((P,), jnp.float32),
+            pltpu.VMEM((P,), jnp.float32),
+            pltpu.VMEM((P,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g_in, R, c0, n0, h0, m0)
+    return out, (cf, nf, hf, mf)

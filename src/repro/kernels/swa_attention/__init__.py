@@ -1,0 +1,5 @@
+from repro.kernels.swa_attention.ops import attention
+from repro.kernels.swa_attention.ref import swa_attention_ref
+from repro.kernels.swa_attention.swa_attention import swa_attention
+
+__all__ = ["attention", "swa_attention", "swa_attention_ref"]

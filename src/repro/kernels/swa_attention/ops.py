@@ -1,0 +1,33 @@
+"""jit'd wrapper dispatching between the Pallas flash kernel and the oracle.
+
+Model code calls ``attention(q, k, v, ...)`` in the (B, S, H, hd) layout used
+by repro.models; this wrapper transposes to head-major, runs the kernel, and
+transposes back. ``use_kernel=False`` (default on CPU paths) falls through
+to the reference; the TPU launcher flips it on.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.swa_attention.ref import swa_attention_ref
+from repro.kernels.swa_attention.swa_attention import swa_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "cap",
+                                             "use_kernel", "interpret"))
+def attention(q, k, v, *, causal=True, window=0, cap=0.0, use_kernel=True,
+              interpret=True):
+    """q: (B, S, H, hd); k, v: (B, S, Hkv, hd) -> (B, S, H, hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if use_kernel:
+        ot = swa_attention(qt, kt, vt, causal=causal, window=window, cap=cap,
+                           interpret=interpret)
+    else:
+        ot = swa_attention_ref(qt, kt, vt, causal=causal, window=window,
+                               cap=cap)
+    return ot.transpose(0, 2, 1, 3)

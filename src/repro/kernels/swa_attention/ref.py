@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the sliding-window flash attention kernel.
+
+Layout (B, H, S, hd) — kernel-friendly head-major. Causal + window banding
++ GQA head grouping + optional logit softcap (gemma2).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def swa_attention_ref(q, k, v, *, causal=True, window=0, cap=0.0):
+    """q: (B, H, Sq, hd); k, v: (B, Hkv, Skv, hd) -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qf = q.astype(jnp.float32) * hd ** -0.5
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(B, Hkv, g, Sq, hd)
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg, kf)
+    if cap:
+        s = jnp.tanh(s / cap) * cap
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.maximum(m, NEG_INF / 2))
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", p, vf) / jnp.maximum(l, 1e-30)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

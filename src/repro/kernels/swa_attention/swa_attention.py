@@ -1,0 +1,127 @@
+"""Pallas TPU sliding-window flash attention (forward).
+
+Grid (B, H, Sq/BQ, Skv/BK); the kv dimension is innermost and sequential,
+accumulating the online softmax in VMEM scratch (m, l, acc) and writing the
+output tile once on the last kv step. Window banding masks per-block and
+skips the matmuls of fully-out-of-band blocks with ``pl.when`` — the
+MXU-aligned analogue of banded sparsity that makes long_500k serving
+sub-quadratic (DESIGN.md).
+
+Block shapes default to (BQ, hd) x (BK, hd) = (128, hd) x (512, hd): with
+hd <= 256 the working set (q, k, v tiles + acc) stays well under VMEM, and
+both matmul dims are multiples of the 128-lane MXU width.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 128
+DEFAULT_BK = 512
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal, window, cap, bq, bk, scale):
+    jq = pl.program_id(2)
+    jk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = jq * bq
+    k_start = jk * bk
+    # block-level band check: any (q, kv) pair in range?
+    q_last, k_first = q_start + bq - 1, k_start
+    in_band = True
+    if causal:
+        in_band = k_first <= q_last
+    if window:
+        in_band = jnp.logical_and(in_band,
+                                  k_start + bk - 1 > q_start - window)
+
+    @pl.when(in_band)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if cap:
+            s = jnp.tanh(s / cap) * cap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - jnp.maximum(m_new, NEG_INF / 2)[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        acc_ref[...] = (acc_ref[...] * corr[:, None]
+                        + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+        m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "cap", "bq", "bk", "interpret"))
+def swa_attention(q, k, v, *, causal=True, window=0, cap=0.0,
+                  bq=DEFAULT_BQ, bk=DEFAULT_BK, interpret=True):
+    """q: (B, H, Sq, hd); k, v: (B, Hkv, Skv, hd) -> (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    pad_q = (-Sq) % bq
+    pad_k = (-Skv) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    Sqp, Skvp = q.shape[2], k.shape[2]
+    grid = (B, H, Sqp // bq, Skvp // bk)
+
+    kernel = functools.partial(_kernel, causal=causal, window=window,
+                               cap=cap, bq=bq, bk=bk, scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, iq, jk: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, iq, jk, g=g: (b, h // g, jk, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, iq, jk, g=g: (b, h // g, jk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, iq, jk: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sqp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    if pad_q:
+        out = out[:, :, :Sq]
+    return out

@@ -1,0 +1,4 @@
+# Launchers: mesh.py (production mesh + sharding rules), dryrun.py
+# (multi-pod lower+compile sweep), train.py, serve.py, roofline.py.
+# NOTE: dryrun must be executed as a MODULE ENTRYPOINT (python -m
+# repro.launch.dryrun) — it sets XLA_FLAGS before importing jax.

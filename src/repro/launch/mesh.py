@@ -1,0 +1,200 @@
+"""Production mesh definitions and the sharding rule engine.
+
+The DPPF mapping (DESIGN.md §2): the worker axis enumerates DPPF replicas
+(each holds distinct parameters), the model axis is tensor-parallel within
+a replica, optional fsdp axes shard weight storage within a replica
+(hierarchical-DPPF extension).
+
+All builders are FUNCTIONS — importing this module never touches jax device
+state (required so smoke tests see 1 device while the dry-run sees 512).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import MeshPlan
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The assigned production mesh: 16x16 = 256 chips per pod;
+    2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_hierarchical_mesh(workers: int, fsdp: int, model: int,
+                           *, multi_pod: bool = False):
+    """Hillclimb variant: re-view the same chips as (worker, fsdp, model) so
+    big models FSDP-shard within each DPPF worker (DESIGN.md memory note).
+    Single-pod must satisfy workers*fsdp*model == 256 (512 multi-pod)."""
+    n = 512 if multi_pod else 256
+    assert workers * fsdp * model == n, (workers, fsdp, model, n)
+    devs = np.asarray(jax.devices()[:n]).reshape(workers, fsdp, model)
+    return Mesh(devs, ("data", "fsdp", "model"))
+
+
+def make_cpu_mesh():
+    """1-device mesh for tests/benches (same code path, trivial shardings)."""
+    devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(devs, ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+# leaf-name -> (model-sharded dim from the right, fsdp-sharded dim from the
+# right). None = replicated over that axis group.
+_RULES = {
+    # attention / dense projections: shard the output features
+    "wq": (-1, -2), "wk": (-1, -2), "wv": (-1, -2),
+    "bq": (-1, None), "bk": (-1, None), "bv": (-1, None),
+    "wo": (-2, -1),
+    # gated MLP
+    "w_gate": (-1, -2), "w_up": (-1, -2), "w_down": (-2, -1),
+    # embeddings / head
+    "embed": (-1, -2), "lm_head": (-1, -2),
+    # mamba
+    "in_proj": (-1, -2), "out_proj": (-2, -1), "conv_w": (-1, None),
+    "conv_b": (-1, None), "norm": (-1, None),
+    # xlstm
+    "w_i": (-1, None), "w_f": (-1, None), "w_gates": (-1, -2),
+    "r_gates": (None, None),
+    # moe router
+    "router": (-1, None),
+}
+
+# inside a "moe" subtree the expert tables shard the EXPERT dim (-3)
+_MOE_RULES = {"w_gate": (-3, -1), "w_up": (-3, -1), "w_down": (-3, -1)}
+
+
+def _axes_size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _axes_entry(axes):
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _leaf_spec(mesh, path, shape, plan: MeshPlan, stacked: bool):
+    names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = names[-1] if names else ""
+    in_moe = "moe" in names
+    rules = _MOE_RULES if (in_moe and name in _MOE_RULES) else _RULES
+    model_dim, fsdp_dim = rules.get(name, (None, None))
+    nd = len(shape)
+    lo = 1 if stacked else 0  # dims below this are the worker stack
+
+    spec = [None] * nd
+    if stacked and nd > 0:
+        spec[0] = _axes_entry(plan.worker_axes)
+
+    # matrices (2 feature dims) may fall back to the sibling feature dim;
+    # bias/vector leaves must never shard their layer-stack prefix dims
+    two_feature = fsdp_dim is not None
+
+    def try_shard(dim, axes):
+        """Place ``axes`` on ``dim`` if free + divisible; else (matrices
+        only) try the sibling feature dim; else give up (replicate)."""
+        if dim is None or not axes:
+            return
+        size = _axes_size(mesh, axes)
+        cands = [dim] + ([-1 if dim == -2 else -2] if two_feature else [])
+        for d in cands:
+            if nd + d < lo:
+                continue
+            if spec[d] is None and shape[d] % size == 0 and shape[d] >= size:
+                spec[d] = _axes_entry(axes)
+                return
+
+    try_shard(model_dim, plan.model_axes)
+    try_shard(fsdp_dim, plan.fsdp_axes)
+    return P(*spec)
+
+
+def param_shardings(mesh: Mesh, params, plan: MeshPlan, *, stacked=True):
+    """NamedShardings for a (possibly worker-stacked) parameter pytree."""
+    def one(path, leaf):
+        return NamedSharding(mesh, _leaf_spec(mesh, path, np.shape(leaf),
+                                              plan, stacked))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_shardings(mesh: Mesh, batch, plan: MeshPlan, *, round_dims=True):
+    """Round batches (tau, M, B, ...): M over worker axes. Per-step DDP
+    batches (M, B, ...): M over worker axes at dim 0."""
+    wdim = 1 if round_dims else 0
+    w = plan.worker_axes if len(plan.worker_axes) > 1 else plan.worker_axes[0]
+
+    def one(path, leaf):
+        spec = [None] * np.ndim(leaf)
+        if np.ndim(leaf) > wdim:
+            spec[wdim] = w
+        if plan.fsdp_axes and np.ndim(leaf) > wdim + 1:
+            spec[wdim + 1] = (plan.fsdp_axes if len(plan.fsdp_axes) > 1
+                              else plan.fsdp_axes[0])
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def serve_shardings(mesh: Mesh, tree, plan: MeshPlan, *, batch: int,
+                    data_ok: bool):
+    """Inference tensors. Per leaf:
+      * the batch dim (detected by size == ``batch``) shards over the data
+        axes when divisible;
+      * for KV caches (k/v leaves, layout (..., B, buf, nkv, hd)) the model
+        axis goes on nkv when divisible, else hd; with batch=1 (long_500k)
+        the buf dim shards over data instead — context-parallel decode;
+      * other state leaves shard their last model-divisible dim over model
+        (mLSTM matrix memories etc.), everything else replicates.
+    """
+    data_axes = plan.worker_axes + plan.fsdp_axes
+    d_size = _axes_size(mesh, data_axes)
+    m_size = _axes_size(mesh, plan.model_axes)
+
+    def one(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = names[-1] if names else ""
+        shape = np.shape(leaf)
+        nd = len(shape)
+        spec = [None] * nd
+        if name == "pos" or nd == 0:
+            return NamedSharding(mesh, P(*spec))
+        is_int = np.issubdtype(np.asarray(leaf).dtype
+                               if not hasattr(leaf, "dtype") else leaf.dtype,
+                               np.integer)
+        # batch dim: first dim whose size == batch
+        b_dim = next((i for i, s in enumerate(shape) if s == batch), None)
+        if data_ok and b_dim is not None and batch % d_size == 0:
+            spec[b_dim] = _axes_entry(data_axes)
+            b_used = True
+        else:
+            b_used = False
+        if name in ("k", "v") and nd >= 4:
+            if not b_used and shape[-3] % d_size == 0:
+                spec[-3] = _axes_entry(data_axes)      # context parallel
+            if shape[-2] % m_size == 0:
+                spec[-2] = _axes_entry(plan.model_axes)
+            elif shape[-1] % m_size == 0:
+                spec[-1] = _axes_entry(plan.model_axes)
+        elif is_int:
+            pass  # token/int inputs: batch sharding only
+        else:
+            # generic state: last model-divisible, non-batch dim
+            for d in range(nd - 1, -1, -1):
+                if spec[d] is None and d != b_dim and shape[d] % m_size == 0 \
+                        and shape[d] >= m_size:
+                    spec[d] = _axes_entry(plan.model_axes)
+                    break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,117 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run's inputs.
+
+``input_specs(cfg, shape, plan, mode)`` returns abstract specs (no device
+allocation) for the jitted step of each workload kind:
+  train  -> fused DPPF round batch (tau, M, B_local, S) [+ modality stubs]
+  ddp    -> per-step batch (M, B_local, S)
+  prefill-> (B, S) prompt batch
+  decode -> (token, index, states) with a KV cache of seq_len (or the
+            sliding-window ring buffer for the long_500k serving variant)
+
+Modality frontends are STUBS by assignment: specs provide the frame/patch
+embeddings directly (DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from repro.configs.base import InputShape, MeshPlan, ModelConfig
+from repro.models import build_model
+
+TOK = jnp.int32
+
+
+def serve_window_for(cfg: ModelConfig, shape: InputShape) -> int:
+    """Sub-quadratic policy for long_500k (DESIGN.md): recurrent archs keep
+    their native O(1)/full-cache path; dense archs serve with a sliding
+    window (gemma2 uses its native 4096)."""
+    if shape.name != "long_500k":
+        return 0
+    if cfg.is_recurrent:
+        return 0
+    return cfg.sliding_window or 8192
+
+
+def buf_len_for(cfg: ModelConfig, shape: InputShape) -> int:
+    w = serve_window_for(cfg, shape)
+    if w:
+        return w
+    # decoder-only prefix archs (vlm/audio stubs) cache prefix + tokens
+    extra = cfg.n_prefix if not cfg.n_enc_layers else 0
+    return shape.seq_len + extra
+
+
+def _modality_specs(cfg: ModelConfig, lead: tuple):
+    out = {}
+    if cfg.n_enc_layers:
+        out["enc"] = SDS(lead + (cfg.n_prefix, cfg.d_model), jnp.float32)
+    elif cfg.n_prefix:
+        out["prefix"] = SDS(lead + (cfg.n_prefix, cfg.d_model), jnp.float32)
+    return out
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, n_workers: int,
+                      tau: int, *, per_step=False):
+    assert shape.global_batch % n_workers == 0, (shape, n_workers)
+    b_local = shape.global_batch // n_workers
+    lead = (n_workers, b_local) if per_step else (tau, n_workers, b_local)
+    specs = {
+        "tokens": SDS(lead + (shape.seq_len,), TOK),
+        "labels": SDS(lead + (shape.seq_len,), TOK),
+    }
+    specs.update(_modality_specs(cfg, lead))
+    return specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape):
+    lead = (shape.global_batch,)
+    specs = {"tokens": SDS(lead + (shape.seq_len,), TOK)}
+    specs.update(_modality_specs(cfg, lead))
+    return specs
+
+
+def param_specs(cfg: ModelConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def decode_state_specs(cfg: ModelConfig, shape: InputShape):
+    """Abstract KV-cache/state specs via eval_shape of a prefill that fills
+    the buffer — no allocation ever happens."""
+    model = build_model(cfg)
+    buf = buf_len_for(cfg, shape)
+    window = serve_window_for(cfg, shape)
+    params = param_specs(cfg)
+    # a dummy short prompt is enough to materialize the state STRUCTURE;
+    # the buffer length is what the dry-run cares about.
+    batch = {"tokens": SDS((shape.global_batch, 1), TOK)}
+    batch.update(_modality_specs(cfg, (shape.global_batch,)))
+    if "prefix" in batch:  # decode states do not include the prefix
+        del batch["prefix"]
+
+    def fn(p, b):
+        return model.prefill(p, b, buf_len=buf, window=window)[1]
+
+    return jax.eval_shape(fn, params, batch)
+
+
+def decode_step_specs(cfg: ModelConfig, shape: InputShape):
+    token = SDS((shape.global_batch, 1), TOK)
+    index = SDS((), TOK)
+    states = decode_state_specs(cfg, shape)
+    return token, index, states
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, plan: MeshPlan,
+                mode: str, n_workers: int, tau: int = 4):
+    if mode == "train":
+        return train_batch_specs(cfg, shape, n_workers, tau)
+    if mode == "ddp":
+        return train_batch_specs(cfg, shape, n_workers, tau, per_step=True)
+    if mode == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    if mode == "decode":
+        return decode_step_specs(cfg, shape)
+    raise ValueError(mode)

@@ -1,0 +1,122 @@
+"""Training launcher: DPPF (or DDP) on any assigned architecture.
+
+CPU-runnable end-to-end driver (the examples call this); on a real pod the
+same script runs under the production mesh with the dry-run's shardings.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --workers 4 --tau 4 --alpha 0.1 --lam 0.5 --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save_pytree
+from repro.configs import ARCHS, DPPFConfig, get_arch, reduced
+from repro.data import TokenTask, make_lm_batch, make_round_batch
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import init_train_state, make_ddp_step, make_round_step
+from repro.train.trainer import TrainState, average_params
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b", choices=sorted(ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override d_model of the smoke config (e.g. scale "
+                         "toward ~100M params)")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--alpha", type=float, default=0.1)
+    ap.add_argument("--lam", type=float, default=0.5)
+    ap.add_argument("--consensus", default="simple_avg")
+    ap.add_argument("--lam-schedule", default="increasing")
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
+    ap.add_argument("--sam-rho", type=float, default=0.0)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8, help="per-worker batch")
+    ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.smoke:
+        over = {}
+        if args.d_model:
+            over.update(d_model=args.d_model,
+                        head_dim=max(args.d_model // 4, 32),
+                        d_ff=2 * args.d_model if cfg.d_ff else 0)
+        if args.layers:
+            over["n_layers"] = args.layers
+        cfg = reduced(cfg, **over)
+    model = build_model(cfg)
+    n_params = sum(l.size for l in jax.tree.leaves(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0))))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M workers={args.workers} "
+          f"tau={args.tau} alpha={args.alpha} lam={args.lam}")
+
+    task = TokenTask(vocab_size=cfg.vocab_size, seq_len=args.seq)
+    dcfg = DPPFConfig(alpha=args.alpha, lam=args.lam, tau=args.tau,
+                      consensus=args.consensus,
+                      lam_schedule=args.lam_schedule)
+    opt = make_optimizer(args.optimizer, momentum=0.9, weight_decay=1e-3)
+    key = jax.random.PRNGKey(args.seed)
+
+    t0 = time.time()
+    if args.consensus == "ddp":
+        p0 = model.init(key)
+        state = TrainState(params=p0, opt=opt.init(p0), cstate={},
+                           t=jnp.zeros((), jnp.int32))
+        step = jax.jit(make_ddp_step(model.loss, opt, base_lr=args.lr,
+                                     total_steps=args.steps,
+                                     sam_rho=args.sam_rho))
+        for s in range(args.steps):
+            batch = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[make_lm_batch(task, args.seed, m, s, args.batch, cfg)
+                  for m in range(args.workers)])
+            state, m = step(state, batch)
+            if s % (args.log_every * args.tau) == 0:
+                print(f"step {s:5d} loss {float(m['train_loss']):.4f}")
+        final = state.params
+    else:
+        state = init_train_state(model.init, opt, dcfg, args.workers, key)
+        step = jax.jit(make_round_step(model.loss, opt, dcfg,
+                                       base_lr=args.lr,
+                                       total_steps=args.steps,
+                                       sam_rho=args.sam_rho))
+        rounds = max(args.steps // args.tau, 1)
+        for r in range(rounds):
+            batch = make_round_batch(task, args.seed, args.workers, args.tau,
+                                     r, args.batch, cfg)
+            state, m = step(state, batch)
+            if r % args.log_every == 0:
+                print(f"round {r:4d} (step {int(state.t):5d}) "
+                      f"loss {float(m['train_loss']):.4f} "
+                      f"consensus_dist {float(m['consensus_dist']):.3f} "
+                      f"lam_t {float(m.get('lam_t', 0)):.3f}")
+        final = average_params(state)
+
+    # held-out eval
+    eval_batch = make_lm_batch(task, args.seed + 999, 0, 10 ** 6,
+                               args.batch * args.workers, cfg)
+    loss, _ = jax.jit(model.loss)(final, eval_batch)
+    print(f"eval loss {float(loss):.4f}  wall {time.time() - t0:.1f}s")
+    if args.ckpt:
+        save_pytree(args.ckpt, final, extra={"steps": args.steps})
+        print(f"checkpoint -> {args.ckpt}")
+    return float(loss)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Config inspector: print every assigned architecture's resolved config,
+analytic param counts, per-chip memory on the production plans, and the
+decode policy per input shape — the pre-flight check an oncall runs before
+launching a job.
+
+  PYTHONPATH=src python -m repro.launch.validate [--arch <id>]
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_arch
+from repro.launch import specs as specs_lib
+
+TP = 16
+HBM_GB = 16.0  # v5e
+
+
+def describe(name: str):
+    cfg = get_arch(name)
+    n = cfg.param_count()
+    na = cfg.active_param_count()
+    blocks = cfg.blocks()
+    kinds = {k: blocks.count(k) for k in sorted(set(blocks))}
+    print(f"\n== {name} [{cfg.family}]  ({cfg.source})")
+    print(f"   L={cfg.n_layers} d={cfg.d_model} H={cfg.n_heads} "
+          f"kv={cfg.n_kv_heads} ff={cfg.d_ff} V={cfg.vocab_size} "
+          f"blocks={kinds}")
+    print(f"   params={n/1e9:.2f}B active={na/1e9:.2f}B")
+    for plan, shards in (("baseline M=16 TP=16", TP),
+                         ("hier M=4 fsdp=4 TP=16", TP * 4)):
+        bf16 = n * 2 / shards / 1e9
+        mom32 = n * 4 / shards / 1e9
+        fit = "FITS" if bf16 + mom32 <= HBM_GB else "OVER"
+        print(f"   {plan}: params(bf16)+mom(fp32) = "
+              f"{bf16 + mom32:5.1f} GB/chip [{fit}]")
+    for sname, shape in INPUT_SHAPES.items():
+        if shape.kind != "decode":
+            continue
+        w = specs_lib.serve_window_for(cfg, shape)
+        buf = specs_lib.buf_len_for(cfg, shape)
+        mode = ("recurrent/native" if cfg.is_recurrent and w == 0 else
+                f"window={w} ring" if w else "full cache")
+        print(f"   {sname}: buf={buf} ({mode})")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
+    args = ap.parse_args(argv)
+    for name in ([args.arch] if args.arch else sorted(ARCHS)):
+        describe(name)
+
+
+if __name__ == "__main__":
+    main()

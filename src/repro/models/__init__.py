@@ -1,0 +1,3 @@
+from repro.models.registry import ModelAPI, build_model
+
+__all__ = ["ModelAPI", "build_model"]

@@ -1,0 +1,185 @@
+"""Attention primitives: GQA projections, chunked online-softmax attention
+(XLA analogue of flash attention — bounded memory for 32k prefill), sliding
+window banding, logit softcap, and a position-tagged KV cache that supports
+both full-length and ring (windowed) buffers.
+
+The Pallas TPU kernel in ``repro.kernels.swa_attention`` implements the same
+math with explicit VMEM tiling; ``repro.kernels.swa_attention.ref`` mirrors
+this module and the kernel is asserted allclose against it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rope, softcap
+
+NEG_INF = -1e30
+_CHUNK = 1024  # kv-block size for the online-softmax scan
+
+
+# ---------------------------------------------------------------------------
+# Projections
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model, n_heads, n_kv_heads, head_dim, dtype,
+                   qkv_bias=False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv_heads * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv_heads * head_dim), dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model),
+                         dtype, fan_in=n_heads * head_dim),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def qkv_proj(p, x, n_heads, n_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, n_heads, head_dim),
+            k.reshape(B, S, n_kv_heads, head_dim),
+            v.reshape(B, S, n_kv_heads, head_dim))
+
+
+def out_proj(p, o):
+    B, S = o.shape[:2]
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Core attention
+# ---------------------------------------------------------------------------
+
+def _mask(q_pos, kv_pos, causal, window):
+    """(Sq, Skv) boolean validity. kv_pos < 0 marks empty cache slots.
+
+    ``window`` may be None (no banding), a python int, or a traced int32
+    scalar (per-layer windows ride through lax.scan); 0 disables banding.
+    """
+    m = kv_pos[None, :] >= 0
+    if causal:
+        m &= kv_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        w = jnp.where(w > 0, w, jnp.int32(2 ** 30))
+        m &= kv_pos[None, :] > q_pos[:, None] - w
+    return m
+
+
+def attend(q, k, v, *, q_pos, kv_pos, causal=True, window=0, cap=0.0):
+    """GQA attention with online-softmax over kv chunks.
+
+    q: (B, Sq, nq, hd); k, v: (B, Skv, nkv, hd); q_pos: (Sq,), kv_pos: (Skv,)
+    Returns (B, Sq, nq, hd).
+    """
+    B, Sq, nq, hd = q.shape
+    Skv, nkv = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = hd ** -0.5
+    qg = q.reshape(B, Sq, nkv, g, hd).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    if Skv <= _CHUNK:
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kf)
+        s = softcap(s, cap)
+        s = jnp.where(_mask(q_pos, kv_pos, causal, window)[None, None, None], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - jax.lax.stop_gradient(jnp.maximum(m, NEG_INF / 2)))
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        o = jnp.einsum("bkgqs,bskh->bkgqh", p, vf) / jnp.maximum(l, 1e-30)
+        return o.reshape(B, nkv * g, Sq, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+    # chunked path: pad Skv to a multiple of _CHUNK with invalid slots
+    pad = (-Skv) % _CHUNK
+    if pad:
+        kf = jnp.pad(kf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-1)
+    n_chunks = kf.shape[1] // _CHUNK
+    kc = kf.reshape(B, n_chunks, _CHUNK, nkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = vf.reshape(B, n_chunks, _CHUNK, nkv, hd).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(n_chunks, _CHUNK)
+
+    m0 = jnp.full((B, nkv, g, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nkv, g, Sq), jnp.float32)
+    a0 = jnp.zeros((B, nkv, g, Sq, hd), jnp.float32)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        m, l, acc = carry
+        kch, vch, pch = xs
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kch)
+        s = softcap(s, cap)
+        s = jnp.where(_mask(q_pos, pch, causal, window)[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard: a fully-masked chunk keeps m_new at NEG_INF; clamp so
+        # exp(NEG_INF - NEG_INF) does not turn masked scores into 1.0
+        p = jnp.exp(s - jnp.maximum(m_new, NEG_INF / 2)[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bkgqs,bskh->bkgqh", p, vch)
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, pc))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(B, nkv * g, Sq, hd).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+
+def init_cache(batch, n_kv, buf_len, head_dim, dtype):
+    """Position-tagged cache. ``pos`` = -1 marks empty slots; a windowed
+    buffer (buf_len == window) becomes a ring buffer transparently."""
+    return {
+        "k": jnp.zeros((batch, buf_len, n_kv, head_dim), dtype),
+        "v": jnp.zeros((batch, buf_len, n_kv, head_dim), dtype),
+        "pos": jnp.full((buf_len,), -1, jnp.int32),
+    }
+
+
+def cache_update(cache, k_new, v_new, index):
+    """Write k/v for ``k_new.shape[1]`` tokens starting at absolute position
+    ``index`` into the (possibly ring) buffer. Returns the updated cache."""
+    buf = cache["k"].shape[1]
+    S = k_new.shape[1]
+    if S == buf:  # prefill exactly fills buffer
+        pos = index + jnp.arange(buf, dtype=jnp.int32)
+        return {"k": k_new.astype(cache["k"].dtype),
+                "v": v_new.astype(cache["v"].dtype), "pos": pos}
+    if S == 1:
+        slot = jnp.mod(index, buf)
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                         (0, slot, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                         (0, slot, 0, 0))
+        pos = jax.lax.dynamic_update_slice(cache["pos"],
+                                           jnp.asarray([index], jnp.int32), (slot,))
+        return {"k": k, "v": v, "pos": pos}
+    # general strided write (prefill shorter than buffer)
+    slot = jnp.mod(index, buf)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    pos = jax.lax.dynamic_update_slice(
+        cache["pos"], index + jnp.arange(S, dtype=jnp.int32), (slot,))
+    return {"k": k, "v": v, "pos": pos}
+
+
+__all__ = [
+    "attend", "cache_update", "init_attention", "init_cache", "out_proj",
+    "qkv_proj", "rope",
+]

@@ -1,0 +1,151 @@
+"""Encoder-decoder backbone (seamless-m4t): encoder over stubbed frame
+embeddings, decoder with self- + cross-attention. Layers are stacked and
+scanned like the decoder-only path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import embed_init, init_mlp, mlp, rms_norm
+from repro.models.transformer import (
+    _embed, _head, cross_entropy, init_attn_block,
+)
+
+
+def _init_dec_block(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.zeros((d,), dtype),
+        "attn": attn.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                    cfg.head_dim, dtype, cfg.qkv_bias),
+        "lnx": jnp.zeros((d,), dtype),
+        "xattn": attn.init_attention(ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim, dtype, cfg.qkv_bias),
+        "ln2": jnp.zeros((d,), dtype),
+        "mlp": init_mlp(ks[2], d, cfg.d_ff, dtype),
+    }
+
+
+def init_encdec(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": embed_init(ks[2], (cfg.vocab_size, cfg.d_model), dtype),
+        "enc": jax.vmap(lambda k: init_attn_block(k, cfg, dtype))(enc_keys),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "dec": jax.vmap(lambda k: _init_dec_block(k, cfg, dtype))(dec_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+        "lm_head": embed_init(ks[3], (cfg.d_model, cfg.vocab_size), dtype),
+    }
+
+
+def encode(cfg, params, enc_in):
+    """enc_in: stubbed frame embeddings (B, F, D) from the audio frontend."""
+    x = enc_in.astype(jnp.dtype(cfg.dtype))
+    F = x.shape[1]
+    pos = jnp.arange(F, dtype=jnp.int32)
+
+    def body(h, p):
+        u = rms_norm(h, p["ln1"], cfg.norm_eps)
+        q, k, v = attn.qkv_proj(p["attn"], u, cfg.n_heads, cfg.n_kv_heads,
+                                cfg.head_dim)
+        q = attn.rope(q, pos, cfg.rope_theta)
+        k = attn.rope(k, pos, cfg.rope_theta)
+        o = attn.attend(q, k, v, q_pos=pos, kv_pos=pos, causal=False)
+        h = h + attn.out_proj(p["attn"], o)
+        h = h + mlp(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg.act)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _dec_block(p, x, cfg, cross_k, cross_v, cache, index):
+    B, S, _ = x.shape
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q, k, v = attn.qkv_proj(p["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                            cfg.head_dim)
+    pos = (index + jnp.arange(S, dtype=jnp.int32) if cache is not None
+           else jnp.arange(S, dtype=jnp.int32))
+    q = attn.rope(q, pos, cfg.rope_theta)
+    k = attn.rope(k, pos, cfg.rope_theta)
+    if cache is None:
+        o = attn.attend(q, k, v, q_pos=pos, kv_pos=pos, causal=True)
+    else:
+        cache = attn.cache_update(cache, k, v, index)
+        o = attn.attend(q, cache["k"], cache["v"], q_pos=pos,
+                        kv_pos=cache["pos"], causal=True)
+    x = x + attn.out_proj(p["attn"], o)
+
+    hx = rms_norm(x, p["lnx"], cfg.norm_eps)
+    qx = (hx @ p["xattn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.head_dim)
+    F = cross_k.shape[1]
+    fpos = jnp.arange(F, dtype=jnp.int32)
+    ox = attn.attend(qx, cross_k, cross_v, q_pos=pos, kv_pos=fpos, causal=False)
+    x = x + attn.out_proj(p["xattn"], ox)
+
+    x = x + mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg.act)
+    return x, cache
+
+
+def _cross_kv(p, enc_out, cfg):
+    B, F, _ = enc_out.shape
+    k = (enc_out @ p["xattn"]["wk"]).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+    v = (enc_out @ p["xattn"]["wv"]).reshape(B, F, cfg.n_kv_heads, cfg.head_dim)
+    return k, v
+
+
+def decode_stack(cfg, params, x, enc_out=None, states=None, index=0):
+    """Run the decoder stack. states: None (train) or
+    {"self": stacked cache, "ck": (L,B,F,nkv,hd), "cv": ...}."""
+    if states is None:
+        def body(h, p):
+            ck, cv = _cross_kv(p, enc_out, cfg)
+            h, _ = _dec_block(p, h, cfg, ck, cv, None, 0)
+            return h, None
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        return x, None
+
+    def body(h, xs):
+        p, cache, ck, cv = xs
+        h, cache = _dec_block(p, h, cfg, ck, cv, cache, index)
+        return h, cache
+
+    x, self_cache = jax.lax.scan(
+        body, x, (params["dec"], states["self"], states["ck"], states["cv"]))
+    return x, {"self": self_cache, "ck": states["ck"], "cv": states["cv"]}
+
+
+def encdec_loss(cfg, params, batch):
+    enc_out = encode(cfg, params, batch["enc"])
+    x = _embed(params, cfg, batch["tokens"])
+    x, _ = decode_stack(cfg, params, x, enc_out=enc_out)
+    logits = _head(params, cfg, x)
+    loss = cross_entropy(logits, batch["labels"])
+    return loss, {"loss": loss, "aux": jnp.float32(0.0)}
+
+
+def encdec_prefill(cfg, params, tokens, enc_in, buf_len, serve_window=0):
+    del serve_window
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = encode(cfg, params, enc_in)
+    B = tokens.shape[0]
+    L = cfg.n_layers
+    one = attn.init_cache(B, cfg.n_kv_heads, buf_len, cfg.head_dim, dtype)
+    self_cache = jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), one)
+    ck, cv = jax.vmap(lambda p: _cross_kv(p, enc_out, cfg))(params["dec"])
+    states = {"self": self_cache, "ck": ck, "cv": cv}
+    x = _embed(params, cfg, tokens)
+    x, states = decode_stack(cfg, params, x, states=states, index=0)
+    return _head(params, cfg, x[:, -1:])[:, 0], states
+
+
+def encdec_decode_step(cfg, params, states, token, index, serve_window=0):
+    del serve_window
+    x = _embed(params, cfg, token)
+    x, states = decode_stack(cfg, params, x, states=states, index=index)
+    return _head(params, cfg, x)[:, 0], states

@@ -1,0 +1,68 @@
+"""Unified model API over all assigned architecture families.
+
+``build_model(cfg)`` returns a ``ModelAPI`` with a family-independent
+signature used by the trainer, the serving engine, and the dry-run:
+
+    init(key)                                   -> params
+    loss(params, batch)                         -> (loss, metrics)
+    prefill(params, batch, buf_len, window=0)   -> (last_logits, states)
+    decode_step(params, states, token, index, window=0) -> (logits, states)
+
+``batch`` keys: tokens (B,S), labels (B,S) [loss only], and per family the
+stubbed modality inputs: prefix (B,P,D) for vlm/audio decoder-only,
+enc (B,F,D) for enc-dec (see DESIGN.md: the frontends are the one sanctioned
+stub — input_specs() supplies embeddings of the right shape).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as lm
+
+
+@dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.n_enc_layers:
+        def init(key):
+            return encdec_lib.init_encdec(cfg, key)
+
+        def loss(params, batch):
+            return encdec_lib.encdec_loss(cfg, params, batch)
+
+        def prefill(params, batch, buf_len, window=0):
+            return encdec_lib.encdec_prefill(cfg, params, batch["tokens"],
+                                             batch["enc"], buf_len, window)
+
+        def decode_step(params, states, token, index, window=0):
+            return encdec_lib.encdec_decode_step(cfg, params, states, token,
+                                                 index, window)
+    else:
+        def init(key):
+            return lm.init_lm(cfg, key)
+
+        def loss(params, batch):
+            return lm.lm_loss(cfg, params, batch)
+
+        def prefill(params, batch, buf_len, window=0):
+            return lm.lm_prefill(cfg, params, batch["tokens"], buf_len,
+                                 prefix=batch.get("prefix"),
+                                 serve_window=window)
+
+        def decode_step(params, states, token, index, window=0):
+            return lm.lm_decode_step(cfg, params, states, token, index,
+                                     serve_window=window)
+
+    return ModelAPI(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                    decode_step=decode_step)

@@ -1,0 +1,170 @@
+"""Mamba2 (SSD) block — chunked selective-state-space scan.
+
+Per head h, scalar decay a_t = exp(-exp(A_log_h) * dt_t):
+    H_t = a_t * H_{t-1} + (dt_t * x_t) outer B_t          (H: (P, N))
+    y_t = H_t @ C_t + D_h * x_t
+Train/prefill uses the chunked SSD formulation (intra-chunk dense matmuls on
+the MXU + inter-chunk scan over states); decode carries (H, conv) state.
+The Pallas kernel in ``repro.kernels.mamba_scan`` implements the intra-chunk
+part with VMEM tiling and is validated against ``_ssd_reference`` here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads or d_in // 64
+    head_p = d_in // heads
+    return d_in, heads, head_p
+
+
+def init_mamba(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, H, P = dims(cfg)
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * N + H), dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 8.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _split(p, u, cfg):
+    """in_proj -> z (gate), xBC (conv stream), dt."""
+    d_in, H, _ = dims(cfg)
+    N = cfg.ssm_state
+    zxbcdt = u @ p["in_proj"]
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:2 * d_in + 2 * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * N:]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, conv_state=None):
+    """Depthwise causal conv over time. xBC: (B, S, Cd); w: (K, Cd)."""
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (K - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = conv_state
+    xp = jnp.concatenate([pad, xBC], axis=1)            # (B, S+K-1, Cd)
+    out = sum(xp[:, i:i + xBC.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else pad[:, :0]
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(xh, B_, C_, a_log, chunk):
+    """Chunked SSD scan.
+
+    xh: (Bt, S, H, P) inputs already scaled by dt; B_, C_: (Bt, S, N);
+    a_log: (Bt, S, H) per-step log decay (<= 0). Returns y: (Bt, S, H, P)
+    and final state (Bt, H, P, N).
+    """
+    Bt, S, H, P = xh.shape
+    N = B_.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+    Sp = xh.shape[1]
+    nc = Sp // chunk
+    xh = xh.reshape(Bt, nc, chunk, H, P)
+    B_ = B_.reshape(Bt, nc, chunk, N)
+    C_ = C_.reshape(Bt, nc, chunk, N)
+    a_log = a_log.reshape(Bt, nc, chunk, H)
+
+    la = jnp.cumsum(a_log, axis=2)                      # (Bt, nc, L, H)
+    # intra-chunk: y[t] = sum_{s<=t} exp(la_t - la_s) (C_t.B_s) xh[s]
+    seg = la[:, :, :, None, :] - la[:, :, None, :, :]   # (Bt, nc, t, s, H)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask BEFORE exp: masked (s > t) entries have seg > 0 and would
+    # overflow, poisoning gradients through the where.
+    seg = jnp.where(causal[None, None, :, :, None], seg, NEG_INF)
+    decay = jnp.exp(seg)
+    G = jnp.einsum("bctn,bcsn->bcts", C_, B_)           # (Bt, nc, t, s)
+    y_intra = jnp.einsum("bcts,bctsh,bcshp->bcthp", G, decay, xh)
+
+    # chunk states: states_c = sum_s exp(la_end - la_s) B_s (x) xh_s
+    rem = jnp.exp(la[:, :, -1:, :] - la)                # (Bt, nc, L, H)
+    states = jnp.einsum("bcsn,bcsh,bcshp->bchpn", B_, rem, xh)
+    chunk_decay = jnp.exp(la[:, :, -1, :])              # (Bt, nc, H)
+
+    def body(h_prev, xs):
+        st, dc, C_c, la_c = xs
+        # inter-chunk contribution: y[t] += exp(la_t) C_t . h_prev
+        y_int = jnp.einsum("btn,bhpn,bth->bthp", C_c, h_prev, jnp.exp(la_c))
+        h_new = dc[:, :, None, None] * h_prev + st
+        return h_new, y_int
+
+    h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    xs = (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2),
+          C_.transpose(1, 0, 2, 3), la.transpose(1, 0, 2, 3))
+    h_final, y_inter = jax.lax.scan(body, h0, xs)
+    y = y_intra + y_inter.transpose(1, 0, 2, 3, 4)
+    y = y.reshape(Bt, Sp, H, P)[:, :S]
+    return y, h_final
+
+
+def mamba_forward(p, x, cfg, state=None):
+    """x: (B, S, D). state: None (train/prefill from scratch) or
+    {"ssm": (B,H,P,N), "conv": (B,K-1,Cd)} for decode.
+    Returns (out (B,S,D), new_state)."""
+    d_in, H, P = dims(cfg)
+    N = cfg.ssm_state
+    u = rms_norm(x, p["ln"], cfg.norm_eps)
+    z, xBC, dt_raw = _split(p, u, cfg)
+    conv_in = None if state is None else state["conv"]
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_in)
+    xs = xBC[..., :d_in]
+    B_ = xBC[..., d_in:d_in + N].astype(jnp.float32)
+    C_ = xBC[..., d_in + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    a_log = -jnp.exp(p["A_log"]) * dt                                 # (B,S,H)
+
+    Bt, S, _ = x.shape
+    xh = xs.reshape(Bt, S, H, P).astype(jnp.float32)
+    xh_dt = xh * dt[..., None]
+
+    if S == 1 and state is not None:
+        h_prev = state["ssm"]
+        a = jnp.exp(a_log[:, 0])                        # (B, H)
+        h_new = (a[:, :, None, None] * h_prev
+                 + jnp.einsum("bhp,bn->bhpn", xh_dt[:, 0], B_[:, 0]))
+        y = jnp.einsum("bhpn,bn->bhp", h_new, C_[:, 0])[:, None]
+        ssm_state = h_new
+    else:
+        y, ssm_state = _ssd_chunked(xh_dt, B_, C_, a_log, cfg.ssm_chunk)
+
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(Bt, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_state = {"ssm": ssm_state, "conv": conv_state}
+    return out, new_state
+
+
+def init_mamba_state(cfg, batch, dtype):
+    d_in, H, P = dims(cfg)
+    N = cfg.ssm_state
+    conv_dim = d_in + 2 * N
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }

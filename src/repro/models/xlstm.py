@@ -1,0 +1,206 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory with recurrent gate connections), following arXiv:2405.04517 with the
+standard exponential-gating stabilizer. d_ff = 0 in the config: each block
+carries its own up/down projection (expand factor ``ssm_expand``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = cfg.ssm_heads or cfg.n_heads
+    return d_in, H, d_in // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, H, P = dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_up": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "wq": dense_init(ks[1], (d_in, d_in), dtype),
+        "wk": dense_init(ks[2], (d_in, d_in), dtype),
+        "wv": dense_init(ks[3], (d_in, d_in), dtype),
+        "w_i": dense_init(ks[4], (d_in, H), jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "w_f": dense_init(ks[5], (d_in, H), jnp.float32),
+        "b_f": jnp.ones((H,), jnp.float32) * 3.0,  # forget-gate bias init
+        "norm": jnp.zeros((d_in,), dtype),
+        "w_down": dense_init(ks[6], (d_in, d), dtype),
+    }
+
+
+def _mlstm_step(carry, xs, P):
+    C, n, m = carry                              # (B,H,P,P), (B,H,P), (B,H)
+    q, k, v, i_raw, f_raw = xs                   # (B,H,P) x3, (B,H) x2
+    m_new = jnp.maximum(f_raw + m, i_raw)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(f_raw + m - m_new)
+    C = f[..., None, None] * C + i[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = f[..., None] * n + i[..., None] * k
+    num = jnp.einsum("bhpq,bhp->bhq", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_chunked(q, k, v, i_raw, f_raw, state, chunk):
+    """Chunkwise-parallel mLSTM — EXACT stabilized equivalent of the
+    per-step recurrence (same log-gate algebra incl. the running max m),
+    but processes L timesteps per scan step with dense (L,L)/(L,P) matmuls.
+    Beyond-paper perf optimization (EXPERIMENTS.md §Perf): scan carry
+    traffic drops by the chunk factor and the contractions hit the MXU.
+
+    q,k,v: (B, S, H, P) fp32; i_raw, f_raw: (B, S, H). Returns (h, state).
+    """
+    B, S, H, P = q.shape
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        zp = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zp(q), zp(k), zp(v)
+        # padded steps: i = -inf (no write), f = 0 (identity decay)
+        i_raw = jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)),
+                        constant_values=-1e30)
+        f_raw = jnp.pad(f_raw, ((0, 0), (0, pad), (0, 0)))
+    Sp = q.shape[1]
+    nc = Sp // L
+    ch = lambda a: a.reshape((B, nc, L) + a.shape[2:]).transpose(
+        (1, 0) + tuple(range(2, a.ndim + 1)))
+    qc, kc, vc = ch(q), ch(k), ch(v)                 # (nc, B, L, H, P)
+    ic, fc = ch(i_raw), ch(f_raw)                    # (nc, B, L, H)
+
+    causal = jnp.tril(jnp.ones((L, L), bool))
+
+    def body(carry, xs):
+        C0, n0, m0 = carry                           # (B,H,P,P),(B,H,P),(B,H)
+        qq, kk, vv, ii, ff = xs
+        F = jnp.cumsum(ff, axis=1)                   # (B, L, H)
+        a = ii - F                                   # i_log_s - F_s
+        m_intra = F + jax.lax.cummax(a, axis=1)      # (B, L, H)
+        m_prev = m0[:, None] + F                     # (B, L, H)
+        m = jnp.maximum(m_intra, m_prev)
+        # intra-chunk weights w[t,s] = exp(i_s + F_t - F_s - m_t)
+        logw = (ii - F)[:, None, :, :] + F[:, :, None, :] - m[:, :, None, :]
+        logw = jnp.where(causal[None, :, :, None], logw, -1e30)
+        w = jnp.exp(logw)                            # (B, t, s, H)
+        scores = jnp.einsum("bthp,bshp->btsh", qq, kk)
+        sw = scores * w
+        num = jnp.einsum("btsh,bshp->bthp", sw, vv)
+        den = jnp.sum(sw * 1.0, axis=2)              # sum_s w * (q.k) -> (B,t,H)
+        carry_scale = jnp.exp(m_prev - m)            # (B, L, H)
+        num = num + carry_scale[..., None] * jnp.einsum(
+            "bhpq,bthp->bthq", C0, qq)
+        den = den + carry_scale * jnp.einsum("bhp,bthp->bth", n0, qq)
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+
+        # end-of-chunk state at stabilizer m_L
+        mL = m[:, -1]                                # (B, H)
+        FL = F[:, -1]                                # (B, H)
+        decay0 = jnp.exp(m0 + FL - mL)               # (B, H)
+        sscale = jnp.exp(ii + FL[:, None] - F - mL[:, None])   # (B, L, H)
+        C_new = (decay0[:, :, None, None] * C0
+                 + jnp.einsum("blh,blhp,blhq->bhpq", sscale, kk, vv))
+        n_new = (decay0[:, :, None] * n0
+                 + jnp.einsum("blh,blhp->bhp", sscale, kk))
+        return (C_new, n_new, mL), h
+
+    state, hs = jax.lax.scan(body, state, (qc, kc, vc, ic, fc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, P)[:, :S]
+    return h, state
+
+
+def mlstm_forward(p, x, cfg, state=None):
+    """x: (B, S, D) -> (out, state). state: (C, n, m)."""
+    d_in, H, P = dims(cfg)
+    B, S, _ = x.shape
+    u = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = u @ p["w_up"]
+    xi, z = up[..., :d_in], up[..., d_in:]
+    q = (xi @ p["wq"]).reshape(B, S, H, P).astype(jnp.float32) * P ** -0.5
+    k = (xi @ p["wk"]).reshape(B, S, H, P).astype(jnp.float32) * P ** -0.5
+    v = (xi @ p["wv"]).reshape(B, S, H, P).astype(jnp.float32)
+    i_raw = xi.astype(jnp.float32) @ p["w_i"] + p["b_i"]   # (B,S,H)
+    f_raw = xi.astype(jnp.float32) @ p["w_f"] + p["b_f"]
+
+    if state is None:
+        state = (jnp.zeros((B, H, P, P), jnp.float32),
+                 jnp.zeros((B, H, P), jnp.float32),
+                 jnp.full((B, H), -1e30, jnp.float32))
+
+    if cfg.xlstm_chunk and S > 1:
+        h, state = _mlstm_chunked(q, k, v, i_raw, f_raw, state,
+                                  cfg.xlstm_chunk)
+        h = h.reshape(B, S, d_in).astype(x.dtype)
+    else:
+        xs = tuple(a.transpose(1, 0, 2, 3) for a in (q, k, v)) + tuple(
+            a.transpose(1, 0, 2) for a in (i_raw, f_raw))
+        state, hs = jax.lax.scan(lambda c, s: _mlstm_step(c, s, P), state, xs)
+        h = hs.transpose(1, 0, 2, 3).reshape(B, S, d_in).astype(x.dtype)
+    h = rms_norm(h * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return h @ p["w_down"], state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, H, P = dims(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_up": dense_init(ks[0], (d, 2 * d_in), dtype),
+        "w_gates": dense_init(ks[1], (d_in, 4 * d_in), dtype),  # z,i,f,o
+        "r_gates": (jax.random.normal(ks[2], (H, P, 4 * P)) * P ** -0.5
+                    ).astype(jnp.float32),                      # block-diag recurrent
+        "b_gates": jnp.concatenate([
+            jnp.zeros((2 * d_in,)), jnp.ones((d_in,)) * 3.0, jnp.zeros((d_in,))
+        ]).astype(jnp.float32),
+        "norm": jnp.zeros((d_in,), dtype),
+        "w_down": dense_init(ks[3], (d_in, d), dtype),
+    }
+
+
+def slstm_forward(p, x, cfg, state=None):
+    """x: (B, S, D) -> (out, state). state: (c, n, h, m) each (B, H, P)."""
+    d_in, H, P = dims(cfg)
+    B, S, _ = x.shape
+    u = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = u @ p["w_up"]
+    xi, zgate = up[..., :d_in], up[..., d_in:]
+    g_in = (xi.astype(jnp.float32) @ p["w_gates"].astype(jnp.float32)
+            + p["b_gates"])                                     # (B,S,4*d_in)
+
+    if state is None:
+        zero = jnp.zeros((B, H, P), jnp.float32)
+        state = (zero, zero + 1e-6, zero, zero - 1e30)
+
+    def step(carry, g_t):
+        c, n, h, m = carry
+        rec = jnp.einsum("bhp,hpq->bhq", h, p["r_gates"])       # (B,H,4P)
+        g = g_t.reshape(B, H, 4 * P) + rec
+        z_r, i_r, f_r, o_r = jnp.split(g, 4, axis=-1)           # (B,H,P)
+        m_new = jnp.maximum(f_r + m, i_r)
+        i = jnp.exp(i_r - m_new)
+        f = jnp.exp(f_r + m - m_new)
+        c = f * c + i * jnp.tanh(z_r)
+        n = f * n + i
+        h_new = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+        return (c, n, h_new, m_new), h_new
+
+    state, hs = jax.lax.scan(step, state, g_in.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, d_in).astype(x.dtype)
+    h = rms_norm(h * jax.nn.silu(zgate), p["norm"], cfg.norm_eps)
+    return h @ p["w_down"], state

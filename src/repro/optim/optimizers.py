@@ -1,0 +1,89 @@
+"""Optimizers: SGD(+momentum, weight decay), AdamW, and the SAM gradient
+transform (Foret'21) used by the DDP-SAM / DPPF-SAM comparisons (Table 4).
+
+Pure-functional: ``opt.init(params) -> state``;
+``opt.step(params, grads, state, lr) -> (params, state)``.
+States are pytrees, so they stack/vmap across DPPF workers transparently.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    step: Callable[..., Any]
+
+
+def _tmap(f, *ts, **kw):
+    return jax.tree.map(f, *ts, **kw)
+
+
+def make_optimizer(name: str, *, momentum=0.9, weight_decay=0.0,
+                   b1=0.9, b2=0.95, eps=1e-8,
+                   state_dtype="float32") -> Optimizer:
+    sdt = jnp.dtype(state_dtype)
+    if name == "sgd":
+        def init(params):
+            return {"mu": _tmap(lambda p: jnp.zeros_like(p, sdt), params)}
+
+        def step(params, grads, state, lr):
+            def upd(p, g, m):
+                g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+                m = (momentum * m.astype(jnp.float32) + g).astype(sdt)
+                return (p.astype(jnp.float32)
+                        - lr * m.astype(jnp.float32)).astype(p.dtype), m
+            flat = _tmap(upd, params, grads, state["mu"])
+            new_p = _tmap(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+            new_m = _tmap(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+            return new_p, {"mu": new_m}
+        return Optimizer("sgd", init, step)
+
+    if name == "adamw":
+        def init(params):
+            z = _tmap(lambda p: jnp.zeros_like(p, jnp.float32), params)
+            return {"m": z, "v": jax.tree.map(jnp.copy, z),
+                    "t": jnp.zeros((), jnp.int32)}
+
+        def step(params, grads, state, lr):
+            t = state["t"] + 1
+            tf = t.astype(jnp.float32)
+
+            def upd(p, g, m, v):
+                g = g.astype(jnp.float32)
+                m = b1 * m + (1 - b1) * g
+                v = b2 * v + (1 - b2) * jnp.square(g)
+                mhat = m / (1 - b1 ** tf)
+                vhat = v / (1 - b2 ** tf)
+                new_p = (p.astype(jnp.float32)
+                         - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                                 + weight_decay * p.astype(jnp.float32)))
+                return new_p.astype(p.dtype), m, v
+            flat = _tmap(upd, params, grads, state["m"], state["v"])
+            pick = lambda i: _tmap(lambda tup: tup[i], flat,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+            return pick(0), {"m": pick(1), "v": pick(2), "t": t}
+        return Optimizer("adamw", init, step)
+
+    raise ValueError(name)
+
+
+def sam_gradient(loss_fn, params, batch, rho, eps=1e-12):
+    """SAM: gradient at the ascent point p + rho * g/||g||.
+    Returns ((loss, aux), sharpness-aware grads)."""
+    (loss0, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                      for l in jax.tree.leaves(g)))
+    scale = rho / jnp.maximum(gn, eps)
+    p_adv = jax.tree.map(
+        lambda p, gg: (p.astype(jnp.float32)
+                       + scale * gg.astype(jnp.float32)).astype(p.dtype),
+        params, g)
+    (_, _), g_adv = jax.value_and_grad(loss_fn, has_aux=True)(p_adv, batch)
+    return (loss0, aux), g_adv

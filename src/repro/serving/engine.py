@@ -1,0 +1,56 @@
+"""Serving engine: batched prefill + greedy decode over the KV cache.
+
+``make_serve_step`` builds the single-token decode function that the
+decode-shape dry-runs lower (decode_32k / long_500k): ONE new token against
+a cache of seq_len. ``window`` activates the sliding-window serving variant
+(ring-buffer cache) that makes long_500k sub-quadratic for dense archs
+(DESIGN.md §Decode-shape applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelAPI
+
+
+def make_serve_step(model: ModelAPI, window: int = 0):
+    """decode one token: (params, states, token (B,1), index) -> (logits, states)."""
+    def serve_step(params, states, token, index):
+        return model.decode_step(params, states, token, index, window=window)
+    return serve_step
+
+
+def generate(model: ModelAPI, params, batch, *, max_new_tokens: int,
+             buf_len: int, window: int = 0, greedy: bool = True, key=None):
+    """Prefill the prompt then decode ``max_new_tokens`` greedily (or
+    sampled). Returns (tokens (B, max_new_tokens), final logits)."""
+    prompt = batch["tokens"]
+    B, S = prompt.shape
+    prefix = 0
+    if "prefix" in batch:
+        prefix = batch["prefix"].shape[1]
+    logits, states = model.prefill(params, batch, buf_len=buf_len,
+                                   window=window)
+    start = S + (prefix if not model.cfg.n_enc_layers else 0)
+
+    def pick(lg, k):
+        if greedy:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg).astype(jnp.int32)
+
+    k0 = key if key is not None else jax.random.PRNGKey(0)
+    tok0 = pick(logits, k0)
+
+    def body(carry, i):
+        tok, states = carry
+        lg, states = model.decode_step(params, states, tok[:, None],
+                                       start + i, window=window)
+        nxt = pick(lg, jax.random.fold_in(k0, i))
+        return (nxt, states), tok
+
+    (last, _), toks = jax.lax.scan(body, (tok0, states),
+                                   jnp.arange(1, max_new_tokens,
+                                              dtype=jnp.int32))
+    out = jnp.concatenate([toks.T, last[:, None]], axis=1)
+    return out, logits

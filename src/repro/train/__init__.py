@@ -1,0 +1,6 @@
+from repro.train.trainer import (
+    TrainState, init_train_state, make_ddp_step, make_round_step,
+)
+
+__all__ = ["TrainState", "init_train_state", "make_ddp_step",
+           "make_round_step"]

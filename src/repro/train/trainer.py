@@ -1,0 +1,135 @@
+"""DPPF trainer: a communication ROUND is one compiled function —
+``lax.scan`` over tau purely-local optimizer steps (zero worker-axis
+collectives) followed by the consensus pull-push update (the round's single
+all-reduce). The DDP baseline is a separate per-step function whose gradient
+mean over the worker axis lowers to the classic every-step all-reduce.
+
+Both are generic over ``loss_fn(params, batch) -> (loss, metrics)`` so the
+same trainer drives the 10 assigned LM architectures and the small
+paper-table stand-in models.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DPPFConfig
+from repro.core import consensus
+from repro.core.schedules import cosine_lr, lam_schedule
+from repro.optim import Optimizer, sam_gradient
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class TrainState:
+    params: Any          # worker-stacked (M, ...) for DPPF; flat for DDP
+    opt: Any
+    cstate: Any          # consensus state (EASGD center etc.)
+    t: jnp.ndarray       # local-step counter (scalar int32)
+
+
+def _grad_norm(grads):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
+def init_train_state(loss_params_init, opt: Optimizer, dcfg: DPPFConfig,
+                     n_workers: int, key, *, same_init=True):
+    """Stack per-worker params. The paper initializes all workers from the
+    same random model (Alg. 1); ``same_init=False`` gives per-worker seeds
+    (useful for the width ablations)."""
+    if same_init:
+        p0 = loss_params_init(key)
+        params = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_workers,) + a.shape), p0)
+        # materialize (broadcast arrays are lazy views)
+        params = jax.tree.map(jnp.array, params)
+    else:
+        keys = jax.random.split(key, n_workers)
+        params = jax.vmap(loss_params_init)(keys)
+    opt_state = jax.vmap(opt.init)(params)
+    cstate = consensus.init_state(dcfg.consensus, params)
+    return TrainState(params=params, opt=opt_state, cstate=cstate,
+                      t=jnp.zeros((), jnp.int32))
+
+
+def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
+                    base_lr: float, total_steps: int, warmup: int = 0,
+                    sam_rho: float = 0.0, total_rounds: Optional[int] = None):
+    """Build the fused DPPF round: scan(tau local steps) + consensus.
+
+    Input batch pytree has leading dims (tau, M, ...). Returns
+    round_step(state, batch) -> (state, metrics). jit/shard at callsite.
+    """
+    total_rounds = total_rounds or max(total_steps // max(dcfg.tau, 1), 1)
+
+    def local_step(p, o, b, t):
+        if sam_rho > 0:
+            (loss, _), g = sam_gradient(loss_fn, p, b, sam_rho)
+        else:
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b)
+        lr = cosine_lr(base_lr, t, total_steps, warmup)
+        gn = _grad_norm(g)
+        p, o = opt.step(p, g, o, lr)
+        return p, o, loss, gn
+
+    def round_step(state: TrainState, batch):
+        def micro(carry, mb):
+            params, opt_st, t = carry
+            params, opt_st, losses, gns = jax.vmap(
+                local_step, in_axes=(0, 0, 0, None))(params, opt_st, mb, t)
+            return (params, opt_st, t + 1), (losses, gns)
+
+        (params, opt_st, t), (losses, gns) = jax.lax.scan(
+            micro, (state.params, state.opt, state.t), batch)
+
+        round_idx = t // max(dcfg.tau, 1)
+        lam_t = lam_schedule(dcfg.lam_schedule, dcfg.lam, round_idx,
+                             total_rounds)
+        params, cstate, metrics = consensus.apply_round(
+            params, dcfg, lam_t, state.cstate,
+            losses=losses[-1], grad_norms=gns[-1])
+        metrics = dict(metrics)
+        metrics["train_loss"] = losses.mean()
+        metrics["lam_t"] = lam_t
+        new_state = TrainState(params=params, opt=opt_st, cstate=cstate, t=t)
+        return new_state, metrics
+
+    return round_step
+
+
+def make_ddp_step(loss_fn, opt: Optimizer, *, base_lr: float,
+                  total_steps: int, warmup: int = 0, sam_rho: float = 0.0):
+    """DDP baseline: one replica; per-worker micro-grads are averaged every
+    step (lowers to the per-step all-reduce on the mesh). Batch leading dim
+    is M (the worker/data axis)."""
+    def step(state: TrainState, batch):
+        def per_worker(b):
+            if sam_rho > 0:
+                (loss, _), g = sam_gradient(loss_fn, state.params, b, sam_rho)
+            else:
+                (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, b)
+            return loss, g
+
+        losses, grads = jax.vmap(per_worker)(batch)
+        g = jax.tree.map(lambda a: jnp.mean(a.astype(jnp.float32), axis=0),
+                         grads)
+        lr = cosine_lr(base_lr, state.t, total_steps, warmup)
+        params, opt_st = opt.step(state.params, g, state.opt, lr)
+        new_state = TrainState(params=params, opt=opt_st, cstate=state.cstate,
+                               t=state.t + 1)
+        return new_state, {"train_loss": losses.mean()}
+
+    return step
+
+
+def average_params(state: TrainState):
+    """Final returned model: the worker average (Alg. 1 last line)."""
+    if jax.tree.leaves(state.params)[0].ndim == 0:
+        return state.params
+    from repro.core import pullpush as pp
+    return pp.tree_mean0(state.params)

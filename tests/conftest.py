@@ -1,0 +1,7 @@
+import os
+import sys
+
+# repo root on sys.path so tests can import the benchmarks package
+# (src/ comes from PYTHONPATH; do NOT set XLA device-count flags here —
+# smoke tests must see 1 device, the dry-run sets its own flags).
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,129 @@
+"""Config exactness: every assigned architecture carries EXACTLY the
+assigned dimensions, every input shape matches the assignment, the smoke
+reduction respects its contract, and the dry-run spec builders produce
+consistent abstract shapes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_arch, get_shape, reduced
+from repro.launch import specs as specs_lib
+
+ASSIGNED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    "internlm2-20b": (48, 6144, 48, 8, 16384, 92544),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+    "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+    "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+    "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+    "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+}
+
+MOE = {"llama4-scout-17b-a16e": (16, 1), "dbrx-132b": (16, 4)}
+
+
+def test_all_ten_archs_present():
+    assert set(ARCHS) == set(ASSIGNED)
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_assigned_dims_exact(name):
+    cfg = get_arch(name)
+    L, d, h, kv, ff, v = ASSIGNED[name]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == (L, d, h, kv, ff, v)
+    assert cfg.source  # every config cites its source
+
+
+def test_moe_configs():
+    for name, (e, k) in MOE.items():
+        cfg = get_arch(name)
+        assert (cfg.n_experts, cfg.top_k) == (e, k)
+    assert get_arch("llama4-scout-17b-a16e").shared_expert
+    assert not get_arch("dbrx-132b").shared_expert
+
+
+def test_family_features():
+    assert get_arch("qwen2-72b").qkv_bias
+    assert get_arch("gemma2-2b").sliding_window == 4096
+    assert get_arch("gemma2-2b").attn_logit_softcap == 50.0
+    assert get_arch("zamba2-7b").ssm_state == 64
+    assert get_arch("zamba2-7b").blocks().count("shared_attn") == 13
+    assert get_arch("seamless-m4t-medium").n_enc_layers == 12
+    assert get_arch("internvl2-2b").n_prefix == 256
+    assert get_arch("xlstm-350m").blocks().count("slstm") == 6
+
+
+def test_input_shapes_exact():
+    want = {
+        "train_4k": (4096, 256, "train"),
+        "prefill_32k": (32768, 32, "prefill"),
+        "decode_32k": (32768, 128, "decode"),
+        "long_500k": (524288, 1, "decode"),
+    }
+    assert set(INPUT_SHAPES) == set(want)
+    for k, (s, b, kind) in want.items():
+        sh = get_shape(k)
+        assert (sh.seq_len, sh.global_batch, sh.kind) == (s, b, kind)
+
+
+@pytest.mark.parametrize("name", sorted(ASSIGNED))
+def test_reduced_contract(name):
+    """Smoke variants: <=512 d_model, <=4 experts, full pattern coverage."""
+    cfg = reduced(get_arch(name))
+    assert cfg.d_model <= 512
+    assert cfg.n_experts <= 4
+    assert cfg.vocab_size <= 512
+    assert cfg.n_layers >= len(cfg.layer_pattern)
+    assert set(cfg.blocks()) == set(get_arch(name).blocks())
+
+
+@pytest.mark.parametrize("shape", sorted(INPUT_SHAPES))
+def test_serve_window_policy(shape):
+    """long_500k is sub-quadratic for every arch: recurrent archs keep
+    native state; full-attention archs get a window."""
+    sh = get_shape(shape)
+    for name, cfg in ARCHS.items():
+        w = specs_lib.serve_window_for(cfg, sh)
+        if shape != "long_500k":
+            assert w == 0
+        elif cfg.is_recurrent:
+            assert w == 0
+        else:
+            assert 0 < w <= 8192
+            buf = specs_lib.buf_len_for(cfg, sh)
+            assert buf == w  # ring buffer, not 500k cache
+
+
+def test_train_specs_shapes():
+    cfg = get_arch("yi-6b")
+    sh = get_shape("train_4k")
+    specs = specs_lib.train_batch_specs(cfg, sh, n_workers=16, tau=4)
+    assert specs["tokens"].shape == (4, 16, 16, 4096)
+    assert specs["labels"].dtype == jnp.int32
+
+
+def test_decode_specs_cache_length():
+    cfg = get_arch("yi-6b")
+    sh = get_shape("decode_32k")
+    tok, idx, states = specs_lib.decode_step_specs(cfg, sh)
+    assert tok.shape == (128, 1)
+    # stacked KV cache: (L, B, buf, kv, hd)
+    k = states["stack"]["attn"] if "stack" in states else states
+    leaf = jax.tree.leaves(states)[0]
+    assert 32768 in leaf.shape  # full-length cache buffer
+
+
+def test_param_counts_vs_nameplate():
+    approx = {"zamba2-7b": 7e9, "xlstm-350m": 0.35e9,
+              "seamless-m4t-medium": 1.2e9, "internvl2-2b": 1.9e9,
+              "dbrx-132b": 132e9, "llama4-scout-17b-a16e": 109e9}
+    for name, want in approx.items():
+        got = ARCHS[name].param_count()
+        assert 0.5 * want < got < 1.8 * want, (name, got, want)

@@ -1,0 +1,142 @@
+"""Unit + property tests for the DPPF core math (Eq. 4/5, E.1, Theorem 1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import DPPFConfig
+from repro.core import consensus, pullpush as pp
+from repro.core.schedules import lam_schedule, qsr_tau
+
+
+def _stacked(key, M=4, shapes=((8, 8), (5,))):
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(ks[i], (M,) + s)
+            for i, s in enumerate(shapes)}
+
+
+def test_eq5_equals_pull_then_push_limit():
+    """Eq. 5 fused == pull-only followed by push-only when x_C = x_A and the
+    push is computed w.r.t. the ORIGINAL gap direction (algebraic identity:
+    both scale the same gap vector)."""
+    x = _stacked(jax.random.PRNGKey(0))
+    alpha, lam = 0.3, 0.2
+    fused, _ = pp.pullpush(x, alpha, lam)
+    center = pp.tree_mean0(x)
+    r = pp.worker_dists(x, center)
+    # manual: x + (a-x) * (alpha - lam/r)
+    coef = alpha - lam / r
+    for k in x:
+        gap = np.asarray(center[k])[None] - np.asarray(x[k])
+        want = np.asarray(x[k]) + gap * np.asarray(coef).reshape(
+            (-1,) + (1,) * (x[k].ndim - 1))
+        np.testing.assert_allclose(np.asarray(fused[k]), want, rtol=1e-5)
+
+
+def test_mean_preserved_by_pullpush():
+    """Workers at equal radius: the average is invariant under Eq. 5."""
+    key = jax.random.PRNGKey(1)
+    d = jax.random.normal(key, (3, 64))
+    d = d / jnp.linalg.norm(d, axis=1, keepdims=True)
+    x = {"w": jnp.concatenate([d, -d]) * 2.0 + 1.5}
+    new, _ = pp.pullpush(x, 0.2, 0.4)
+    np.testing.assert_allclose(np.asarray(new["w"].mean(0)),
+                               np.asarray(x["w"].mean(0)), atol=1e-5)
+
+
+def test_push_only_increases_distance():
+    x = _stacked(jax.random.PRNGKey(2))
+    r0 = pp.worker_dists(x)
+    pushed = pp.push_only(x, 0.5)
+    r1 = pp.worker_dists(pushed)
+    assert np.all(np.asarray(r1) > np.asarray(r0))
+
+
+def test_exact_push_drops_to_simplified_under_symmetry():
+    """D.1: with workers symmetric around x_A the mean unit direction is 0,
+    so the exact two-term update == the simplified push (up to lam_r/M)."""
+    key = jax.random.PRNGKey(3)
+    d = jax.random.normal(key, (4, 32))
+    d = d / jnp.linalg.norm(d, axis=1, keepdims=True)
+    x = {"w": jnp.concatenate([d, -d]) * 3.0}
+    M = 8
+    lam = 0.25
+    exact = pp.exact_push(x, lam_r=lam * M)
+    simple = pp.push_only(x, lam)
+    np.testing.assert_allclose(np.asarray(exact["w"]),
+                               np.asarray(simple["w"]), rtol=1e-4, atol=1e-5)
+
+
+def test_push_terms_norms_t2_small_when_symmetric():
+    key = jax.random.PRNGKey(4)
+    d = jax.random.normal(key, (4, 32))
+    d = d / jnp.linalg.norm(d, axis=1, keepdims=True)
+    x = {"w": jnp.concatenate([d, -d]) * 3.0}
+    n1, n2, n12 = pp.push_terms_norms(x, lam_r=2.0)
+    assert float(n2) < 1e-5
+    np.testing.assert_allclose(np.asarray(n1), np.asarray(n12), rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(alpha=st.floats(0.05, 0.9), lam=st.floats(0.05, 1.0),
+       m=st.integers(2, 5))
+def test_theorem1_convergence_on_random_walk(alpha, lam, m):
+    """Noisy quadratic toy: repeated rounds drive E||Delta|| to lam/alpha
+    within the theory's O(eta*sigma + 1/sqrt(M)) slack."""
+    key = jax.random.PRNGKey(int(alpha * 1000) + m)
+    x = {"w": jax.random.normal(key, (2 * m, 48))}
+    dcfg = DPPFConfig(alpha=alpha, lam=lam, consensus="simple_avg")
+    state = consensus.init_state("simple_avg", x)
+    eta = 0.005
+    for k in range(250):
+        noise = jax.random.normal(jax.random.fold_in(key, k), x["w"].shape)
+        x = {"w": x["w"] - eta * x["w"] + eta * noise}
+        x, state, metrics = consensus.apply_round(x, dcfg, lam, state)
+    target = lam / alpha
+    got = float(metrics["consensus_dist"])
+    assert abs(got - target) < 0.35 * target + 10 * eta
+
+
+def test_consensus_methods_run_and_pull():
+    key = jax.random.PRNGKey(5)
+    x = _stacked(key, M=4)
+    losses = jnp.asarray([3.0, 1.0, 2.0, 4.0])
+    gnorms = jnp.asarray([1.0, 2.0, 0.5, 1.0])
+    for method in ("simple_avg", "hard", "easgd", "lsgd", "mgrawa"):
+        dcfg = DPPFConfig(alpha=0.5, lam=0.0, push=False, consensus=method)
+        state = consensus.init_state(method, x)
+        new, state, m = consensus.apply_round(x, dcfg, 0.0, state,
+                                              losses=losses, grad_norms=gnorms)
+        assert float(m["consensus_dist"]) <= float(pp.worker_dists(x).mean())
+
+
+def test_lsgd_pulls_toward_leader():
+    x = {"w": jnp.asarray([[0.0, 0.0], [10.0, 10.0]])}
+    losses = jnp.asarray([0.1, 5.0])  # worker 0 is leader
+    target, _, idx = consensus.consensus_target("lsgd", x, {}, losses=losses)
+    assert int(idx) == 0
+    np.testing.assert_allclose(np.asarray(target["w"]), [0.0, 0.0])
+
+
+def test_mgrawa_weights_inverse_grad_norm():
+    x = {"w": jnp.asarray([[0.0], [1.0]])}
+    gn = jnp.asarray([1e9, 1.0])  # worker 0 has huge grads -> tiny weight
+    target, _, _ = consensus.consensus_target("mgrawa", x, {}, grad_norms=gn)
+    np.testing.assert_allclose(np.asarray(target["w"]), [1.0], atol=1e-6)
+
+
+def test_lam_schedules():
+    assert float(lam_schedule("fixed", 0.5, 0, 100)) == 0.5
+    assert float(lam_schedule("increasing", 0.5, 0, 100)) == pytest.approx(0.0)
+    assert float(lam_schedule("increasing", 0.5, 100, 100)) == pytest.approx(0.5)
+    assert float(lam_schedule("decreasing", 0.5, 0, 100)) == pytest.approx(0.5)
+    assert float(lam_schedule("decreasing", 0.5, 100, 100)) == pytest.approx(0.0)
+
+
+def test_qsr_rule():
+    assert qsr_tau(0.8, 2, 0.25) == 2          # high lr -> tau_base
+    assert qsr_tau(0.01, 2, 0.25) == 625       # low lr -> (beta/eta)^2
+    assert qsr_tau(0.0, 4, 0.25) == 4

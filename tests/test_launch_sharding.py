@@ -1,0 +1,146 @@
+"""Launch-layer tests. Sharding rules are pure functions — testable without
+devices; actual multi-device lowering runs in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count (kept small for CI; the
+full 256/512-chip sweep is the dry-run deliverable)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, MeshPlan, get_shape
+from repro.launch import roofline as rf
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_param_count_sane():
+    # dense param counts should be within ~15% of the nameplate sizes
+    approx = {
+        "yi-6b": 6e9, "qwen2-72b": 72e9, "internlm2-20b": 20e9,
+        "gemma2-2b": 2.6e9,
+    }
+    for name, want in approx.items():
+        got = ARCHS[name].param_count()
+        assert abs(got - want) / want < 0.2, (name, got)
+
+
+def test_moe_active_params_smaller():
+    for name in ("dbrx-132b", "llama4-scout-17b-a16e"):
+        cfg = ARCHS[name]
+        assert cfg.active_param_count() < 0.5 * cfg.param_count()
+
+
+def test_roofline_shape_bytes():
+    assert rf._type_info("f32[2,3]{1,0}")[0] == 24
+    assert rf._type_info("(bf16[4,4]{1,0}, pred[])")[0] == 33
+    assert rf._type_info("token[]")[0] == 0
+
+
+def test_roofline_hlo_analyzer_counts_trips():
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = parameter(0)
+  %dot.1 = f32[8,8]{1,0} dot(%gte1, %gte1), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  %ar = f32[8,128]{1,0} all-reduce(%gte1), channel_id=1
+  ROOT %t = tuple(%i, %gte1)
+}
+
+%cond (p: (s32[], f32[8,128])) -> pred[] {
+  %p2 = parameter(0)
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128]{1,0} parameter(0)
+  %gte1 = f32[8,128]{1,0} copy(%a)
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+}
+"""
+    res = rf.analyze_hlo(hlo)
+    # all-reduce payload counted 5x
+    assert res["collectives"]["all-reduce"]["bytes"] == 5 * 8 * 128 * 4
+    assert res["collectives"]["all-reduce"]["count"] == 5
+
+
+def test_leaf_spec_divisibility_fallback():
+    """Vocab 256206 is not divisible by 16 -> the model axis must fall back
+    to the d_model dim; undividable head dims replicate."""
+    body = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np, json
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import param_shardings
+from repro.configs import MeshPlan
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+plan = MeshPlan(worker_axes=("data",), model_axes=("model",))
+params = {"embed": np.zeros((2, 256206, 1024)),
+          "blocks": {"stack": {"attn": {"wq": np.zeros((2, 12, 1024, 512)),
+                                         "bq": np.zeros((2, 12, 6))}}}}
+sh = param_shardings(mesh, params, plan, stacked=True)
+print(json.dumps({
+  "embed": str(sh["embed"].spec),
+  "wq": str(sh["blocks"]["stack"]["attn"]["wq"].spec),
+  "bq": str(sh["blocks"]["stack"]["attn"]["bq"].spec),
+}))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                         text=True, env=env, timeout=240)
+    assert out.returncode == 0, out.stderr
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert "model" in got["embed"] and "256206" not in got["embed"]
+    assert got["wq"] == "PartitionSpec('data', None, None, 'model')"
+    assert got["bq"] == "PartitionSpec('data', None, None)"  # 6 % 4 != 0
+
+
+@pytest.mark.slow
+def test_dryrun_reduced_multidevice():
+    """End-to-end: lower+compile the DPPF round for a REDUCED arch on an
+    8-device (2 workers x 4 model) host mesh in a subprocess."""
+    body = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np, dataclasses
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.configs import ARCHS, DPPFConfig, MeshPlan, reduced
+from repro.launch import mesh as mesh_lib
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.train import init_train_state, make_round_step
+
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 4), ("data", "model"))
+plan = MeshPlan(worker_axes=("data",), model_axes=("model",))
+cfg = reduced(ARCHS["gemma2-2b"], vocab_size=512, d_model=256)
+model = build_model(cfg)
+dcfg = DPPFConfig(tau=2)
+opt = make_optimizer("sgd")
+state = init_train_state(model.init, opt, dcfg, 2, jax.random.PRNGKey(0))
+p_sh = mesh_lib.param_shardings(mesh, state.params, plan)
+state = dataclasses.replace(
+    state,
+    params=jax.device_put(state.params, p_sh),
+    opt=jax.device_put(state.opt, {"mu": p_sh}))
+step = jax.jit(make_round_step(model.loss, opt, dcfg, base_lr=0.05,
+                               total_steps=10))
+B, S = 4, 32
+batch = {"tokens": jnp.zeros((2, 2, B, S), jnp.int32),
+         "labels": jnp.zeros((2, 2, B, S), jnp.int32)}
+b_sh = mesh_lib.batch_shardings(mesh, batch, plan)
+batch = jax.device_put(batch, b_sh)
+with mesh:
+    state2, m = step(state, batch)
+    jax.block_until_ready(m["train_loss"])
+print("OK", float(m["train_loss"]))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                         text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout

@@ -1,0 +1,106 @@
+"""Trainer integration: DPPF round dynamics on real models, DDP equivalence
+at tau=1/alpha=1/no-push, FL rounds, Theorem-1 width on a DNN."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.common import (
+    default_data, mlp_init, mlp_loss, round_batches, run_distributed,
+    worker_shards,
+)
+from repro.configs import DPPFConfig
+from repro.core import pullpush as pp
+from repro.optim import make_optimizer
+from repro.train import init_train_state, make_round_step
+from repro.train.trainer import average_params
+
+
+def test_hard_localsgd_resets_workers_to_average():
+    """alpha=1 (LocalSGD): after each round all workers are identical."""
+    data = default_data()
+    dcfg = DPPFConfig(consensus="hard", tau=4, push=False)
+    opt = make_optimizer("sgd")
+    state = init_train_state(
+        lambda k: mlp_init(k, data["dim"], data["n_classes"]), opt, dcfg, 4,
+        jax.random.PRNGKey(0))
+    step = jax.jit(make_round_step(mlp_loss, opt, dcfg, base_lr=0.05,
+                                   total_steps=40))
+    shards = worker_shards(2048, 4)
+    rng = np.random.default_rng(0)
+    state, m = step(state, round_batches(data, shards, rng, 4, 4, 32))
+    assert float(m["consensus_dist"]) < 1e-5
+
+
+def test_dppf_width_converges_on_mlp():
+    data = default_data()
+    r = run_distributed(data, DPPFConfig(alpha=0.2, lam=0.8, tau=4,
+                                         lam_schedule="fixed"),
+                        M=8, steps=300)
+    assert abs(r.consensus_dist - 4.0) < 0.8
+
+
+def test_no_push_weak_pull_collapses():
+    data = default_data()
+    r = run_distributed(data, DPPFConfig(alpha=0.05, lam=0.0, push=False,
+                                         tau=4), M=4, steps=500,
+                        track_every=5)
+    h = r.history["consensus_dist"]
+    assert r.consensus_dist < 0.6 * max(h[:3])  # valley collapse (Fig. 2b)
+
+
+def test_round_counter_advances_tau_steps():
+    data = default_data()
+    dcfg = DPPFConfig(tau=8)
+    opt = make_optimizer("sgd")
+    state = init_train_state(
+        lambda k: mlp_init(k, data["dim"], data["n_classes"]), opt, dcfg, 2,
+        jax.random.PRNGKey(0))
+    step = jax.jit(make_round_step(mlp_loss, opt, dcfg, base_lr=0.05,
+                                   total_steps=80))
+    shards = worker_shards(2048, 2)
+    rng = np.random.default_rng(0)
+    state, _ = step(state, round_batches(data, shards, rng, 8, 2, 16))
+    assert int(state.t) == 8
+
+
+def test_average_params_matches_manual_mean():
+    data = default_data()
+    dcfg = DPPFConfig(tau=2)
+    opt = make_optimizer("sgd")
+    state = init_train_state(
+        lambda k: mlp_init(k, data["dim"], data["n_classes"]), opt, dcfg, 4,
+        jax.random.PRNGKey(0))
+    avg = average_params(state)
+    for k in avg:
+        np.testing.assert_allclose(np.asarray(avg[k]["w"]),
+                                   np.asarray(state.params[k]["w"].mean(0)),
+                                   rtol=1e-6)
+
+
+def test_fl_scaffold_round_runs_and_dppf_keeps_spread():
+    from repro.core import fl
+    data = default_data()
+    M = 4
+    p0 = mlp_init(jax.random.PRNGKey(0), data["dim"], data["n_classes"])
+    stacked = jax.tree.map(
+        lambda a: jnp.array(jnp.broadcast_to(a[None], (M,) + a.shape)), p0)
+    key = jax.random.PRNGKey(9)
+    batches = {"x": jax.random.normal(key, (4, M, 16, data["dim"])),
+               "y": jax.random.randint(jax.random.fold_in(key, 1),
+                                       (4, M, 16), 0, data["n_classes"])}
+    loss = lambda p, b: mlp_loss(p, b)[0]
+
+    st_plain = fl.init_fl_state("scaffold", stacked)
+    new_plain, _, _ = fl.fl_round("scaffold", loss, stacked, st_plain,
+                                  batches, 0.05)
+    assert float(pp.worker_dists(new_plain).mean()) < 1e-6  # FedAvg reset
+
+    dcfg = DPPFConfig(alpha=0.9, lam=1.8)
+    st_d = fl.init_fl_state("scaffold", stacked)
+    new_d, _, m = fl.fl_round("scaffold", loss, stacked, st_d, batches, 0.05,
+                              dppf=dcfg, lam_t=1.8)
+    # push keeps workers apart (post-round spread ~ lam for small pre-gap)
+    assert float(pp.worker_dists(new_d).mean()) > 0.5

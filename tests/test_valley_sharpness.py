@@ -1,0 +1,107 @@
+"""Tests for the Mean Valley measure (Alg. 2) and the sharpness baselines:
+analytic quadratic landscapes give exact expected boundary distances."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sharpness import (
+    eps_sharpness, fisher_rao, hessian_measures, kendall_tau, lpf,
+)
+from repro.core.valley import mean_valley, normalize_params
+
+
+def quad_loss_factory(curv):
+    """L(x) = 0.5 * sum_i curv_i x_i^2 + 1 (offset keeps kappa*L_A finite)."""
+    c = jnp.asarray(curv)
+
+    def loss(params):
+        x = params["x"]
+        return 0.5 * jnp.sum(c * x * x) + 1.0
+    return loss
+
+
+def test_mean_valley_exact_on_isotropic_quadratic():
+    """Isotropic quadratic with curvature c: from x_A = 0 (loss 1), the
+    kappa=2 contour along any unit direction sits at beta = sqrt(2/c).
+    MV must find it (up to the line-search step size)."""
+    c = 0.5
+    loss = quad_loss_factory([c] * 8)
+    workers = [{"x": jnp.eye(8)[i] * 0.3} for i in range(4)]
+    res = mean_valley(loss, workers, kappa=2.0, step=0.02, max_steps=400)
+    expect = float(np.sqrt(2.0 / c))
+    assert abs(res["mv"] - expect) < 0.06
+    assert res["inv_mv"] == -res["mv"]
+
+
+def test_mean_valley_orders_curvatures():
+    """Wider valley (smaller curvature) => larger MV => smaller Inv. MV."""
+    flat = quad_loss_factory([0.1] * 6)
+    sharp = quad_loss_factory([5.0] * 6)
+    workers = [{"x": jnp.eye(6)[i] * 0.2} for i in range(3)]
+    mv_flat = mean_valley(flat, workers, step=0.05, max_steps=500)["mv"]
+    mv_sharp = mean_valley(sharp, workers, step=0.05, max_steps=500)["mv"]
+    assert mv_flat > mv_sharp
+
+
+def test_normalize_params_unit_frobenius():
+    p = {"a": jnp.ones((3, 3)) * 7.0, "b": jnp.zeros((2,))}
+    n = normalize_params(p)
+    np.testing.assert_allclose(float(jnp.linalg.norm(n["a"])), 1.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(n["b"]), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# sharpness baselines on analytic quadratics: L = 0.5 x^T diag(c) x
+# ---------------------------------------------------------------------------
+
+def _quad_batch_loss(c):
+    cv = jnp.asarray(c)
+
+    def loss(params, batch):
+        del batch
+        return 0.5 * jnp.sum(cv * params["x"] * params["x"])
+    return loss
+
+
+def test_fisher_rao_quadratic():
+    """<x, Hx> = sum c_i x_i^2 exactly for the quadratic."""
+    c = [1.0, 2.0, 3.0]
+    x = jnp.asarray([1.0, 1.0, 2.0])
+    got = fisher_rao(_quad_batch_loss(c), {"x": x}, None)
+    assert got == pytest.approx(float(jnp.sum(jnp.asarray(c) * x * x)), rel=1e-5)
+
+
+def test_hessian_measures_quadratic():
+    c = [1.0, 2.0, 8.0, 0.5]
+    res = hessian_measures(_quad_batch_loss(c), {"x": jnp.ones(4)}, None,
+                           jax.random.PRNGKey(0), lanczos_iters=8,
+                           hutchinson=64)
+    assert res["lambda_max"] == pytest.approx(8.0, rel=1e-3)
+    assert res["trace"] == pytest.approx(sum(c), rel=0.35)  # Hutchinson noise
+    frob = float(np.sqrt(sum(x * x for x in c)))
+    assert res["frob"] == pytest.approx(frob, rel=0.35)
+
+
+def test_eps_sharpness_orders_curvature():
+    flat = eps_sharpness(_quad_batch_loss([0.1] * 4), {"x": jnp.ones(4)},
+                         None, eps=1e-2)
+    sharp = eps_sharpness(_quad_batch_loss([10.0] * 4), {"x": jnp.ones(4)},
+                          None, eps=1e-2)
+    assert sharp > flat >= 0.0
+
+
+def test_lpf_orders_curvature():
+    key = jax.random.PRNGKey(1)
+    flat = lpf(_quad_batch_loss([0.1] * 4), {"x": jnp.zeros(4)}, None, key,
+               sigma=0.5, mcmc=64)
+    sharp = lpf(_quad_batch_loss([10.0] * 4), {"x": jnp.zeros(4)}, None, key,
+                sigma=0.5, mcmc=64)
+    assert sharp > flat
+
+
+def test_kendall_tau():
+    assert kendall_tau([1, 2, 3], [10, 20, 30]) == pytest.approx(1.0)
+    assert kendall_tau([1, 2, 3], [30, 20, 10]) == pytest.approx(-1.0)
