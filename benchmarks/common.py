@@ -20,8 +20,10 @@ from repro.configs import DPPFConfig
 from repro.core import pullpush as pp
 from repro.data import classification_task
 from repro.optim import make_optimizer
-from repro.train import init_train_state, make_ddp_step, make_round_step
-from repro.train.trainer import TrainState, average_params
+from repro.train import (
+    TrainState, average_params, init_train_state, make_ddp_step,
+    make_round_step, stacked_params,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -130,9 +132,10 @@ def run_distributed(data, dcfg: DPPFConfig, *, M=4, bs=64, steps=400,
     else:
         state = init_train_state(p0, opt, dcfg, M, key)
         rounds_total = max(steps // dcfg.tau, 1)
+        # donation keeps the flat engine's view in place across rounds
         step_fn = jax.jit(make_round_step(
             mlp_loss, opt, dcfg, base_lr=lr, total_steps=steps,
-            sam_rho=sam_rho, total_rounds=rounds_total))
+            sam_rho=sam_rho, total_rounds=rounds_total), donate_argnums=0)
         from repro.core.schedules import cosine_lr, qsr_tau
         t, comm_rounds = 0, 0
         qsr_fns = {}
@@ -146,7 +149,7 @@ def run_distributed(data, dcfg: DPPFConfig, *, M=4, bs=64, steps=400,
                     qsr_fns[tau_t] = jax.jit(make_round_step(
                         mlp_loss, opt, dc.replace(dcfg, tau=tau_t),
                         base_lr=lr, total_steps=steps, sam_rho=sam_rho,
-                        total_rounds=rounds_total))
+                        total_rounds=rounds_total), donate_argnums=0)
                 fn, tau_eff = qsr_fns[tau_t], tau_t
             else:
                 fn, tau_eff = step_fn, dcfg.tau
@@ -161,10 +164,11 @@ def run_distributed(data, dcfg: DPPFConfig, *, M=4, bs=64, steps=400,
                 history["lam"].append(float(m.get("lam_t", 0.0)))
                 history["step"].append(t)
         avg = average_params(state)
-        workers = [jax.tree.map(lambda a, i=i: a[i], state.params)
+        stacked = stacked_params(state)   # tree view whichever engine ran
+        workers = [jax.tree.map(lambda a, i=i: a[i], stacked)
                    for i in range(M)]
         comm_pct = 100.0 * comm_rounds / steps
-        cdist = float(pp.worker_dists(state.params).mean())
+        cdist = float(pp.worker_dists(stacked).mean())
 
     train_err = error_pct(avg, data["x_train"], data["y_train"])
     test_err = error_pct(avg, data["x_test"], data["y_test"])

@@ -1,9 +1,14 @@
-"""Micro-benchmarks: us_per_call for the hot paths (fused pull-push vs
-naive, DPPF round vs DDP steps at equal token budget) on this host CPU.
-Wall-times are host-relative — the TPU story is §Roofline — but the
-RELATIVE comparison (fused consensus cost, round amortization) holds."""
+"""Micro-benchmarks: us_per_call for the hot paths (flat ConsensusEngine vs
+tree-path consensus, fused pull-push vs naive, DPPF round vs DDP steps at
+equal token budget) on this host CPU. Wall-times are host-relative — the
+TPU story is §Roofline — but the RELATIVE comparison (flat-engine speedup,
+fused consensus cost, round amortization) holds.
+
+``--smoke`` shrinks every size so the whole file runs in seconds (CI).
+"""
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -11,7 +16,9 @@ import jax.numpy as jnp
 
 from benchmarks.common import csv, default_data, mlp_init, mlp_loss
 from repro.configs import DPPFConfig
+from repro.core import consensus
 from repro.core import pullpush as pp
+from repro.core.engine import ConsensusEngine
 from repro.optim import make_optimizer
 from repro.train import init_train_state, make_round_step, make_ddp_step
 from repro.train.trainer import TrainState
@@ -26,10 +33,70 @@ def _time(fn, *args, n=20):
     return (time.perf_counter() - t0) / n * 1e6
 
 
-def run():
+def _time_donated(fn, arg, n=20):
+    """Time a donating jit'd fn by threading its output back in (this is
+    exactly how the trainer reuses the flat view between rounds)."""
+    out = fn(arg)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(out)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def _transformer_like_stacked(key, M, target_params):
+    """Worker-stacked pytree with a realistic leaf census — hundreds of
+    mixed matrix/vector leaves, like a real LM checkpoint (a 1M-param model
+    has ~750 leaves; a 6B one has ~400 larger ones). Per-leaf dispatch is
+    exactly what the tree path pays for and the flat engine amortizes."""
+    block = [(64, 64), (64,), (64, 16), (16,)]
+    per_block = sum(s[0] * (s[1] if len(s) > 1 else 1) for s in block)
+    shapes = block * max(target_params // per_block, 1)
+    ks = jax.random.split(key, len(shapes))
+    return {f"p{i}": jax.random.normal(ks[i], (M,) + s)
+            for i, s in enumerate(shapes)}
+
+
+def bench_engine_vs_tree(*, smoke=False):
+    """THE acceptance row: flat ConsensusEngine vs the stacked-tree path on
+    the same 8-worker x ~1M-param consensus round (Eq. 5)."""
+    M = 8
+    target = 20_000 if smoke else 1_000_000
+    n_it = 3 if smoke else 20
+    stacked = _transformer_like_stacked(jax.random.PRNGKey(0), M, target)
+    dcfg = DPPFConfig(alpha=0.1, lam=0.5)
+    lam_t = 0.3
+
+    tree_fn = jax.jit(
+        lambda s: consensus.apply_round(s, dcfg, lam_t, {})[0])
+    us_tree = _time(tree_fn, stacked, n=n_it)
+
+    engine = ConsensusEngine.from_stacked(stacked)
+    flat = engine.flatten(stacked)          # ONCE per run — not timed
+    flat_fn = jax.jit(
+        lambda f: consensus.apply_round(f, dcfg, lam_t, {}, engine=engine)[0],
+        donate_argnums=0)
+    us_flat = _time_donated(flat_fn, flat, n=n_it)
+
+    n = engine.layout.n
+    csv("microbench", op=f"consensus_tree_{M}x{n}",
+        us_per_call=round(us_tree, 1))
+    csv("microbench", op=f"consensus_engine_{M}x{n}",
+        us_per_call=round(us_flat, 1))
+    csv("microbench", op="engine_vs_tree",
+        speedup=round(us_tree / us_flat, 2),
+        note="flat ConsensusEngine (persistent donated view) vs "
+             "stacked-tree apply_round")
+    return us_tree / us_flat
+
+
+def bench_pullpush(*, smoke=False):
     # fused pull-push vs naive multi-pass
     key = jax.random.PRNGKey(0)
-    stacked = {"w": jax.random.normal(key, (8, 1_000_000))}
+    n = 20_000 if smoke else 1_000_000
+    n_it = 3 if smoke else 20
+    stacked = {"w": jax.random.normal(key, (8, n))}
     fused = jax.jit(lambda s: pp.pullpush(s, 0.1, 0.5)[0])
 
     def naive(s):
@@ -41,15 +108,19 @@ def run():
         return jax.tree.map(lambda x, c: x + (c[None] - x) * coef.reshape(
             (-1,) + (1,) * (x.ndim - 1)), s, a)
 
-    csv("microbench", op="pullpush_fused_8x1M",
-        us_per_call=round(_time(fused, stacked), 1))
-    csv("microbench", op="pullpush_naive_8x1M",
-        us_per_call=round(_time(jax.jit(naive), stacked), 1))
+    csv("microbench", op=f"pullpush_fused_8x{n}",
+        us_per_call=round(_time(fused, stacked, n=n_it), 1))
+    csv("microbench", op=f"pullpush_naive_8x{n}",
+        us_per_call=round(_time(jax.jit(naive), stacked, n=n_it), 1))
 
+
+def bench_round_vs_ddp(*, smoke=False):
     # DPPF round vs tau DDP steps at the same token budget
+    key = jax.random.PRNGKey(0)
     data = default_data()
     opt = make_optimizer("sgd")
-    M, bs, tau = 4, 64, 4
+    M, bs, tau = 4, 16 if smoke else 64, 4
+    n_it = 3 if smoke else 20
     dcfg = DPPFConfig(alpha=0.1, lam=0.5, tau=tau)
     st = init_train_state(lambda k: mlp_init(k, data["dim"],
                                              data["n_classes"]),
@@ -58,7 +129,7 @@ def run():
                                        total_steps=100))
     batch = {"x": jnp.zeros((tau, M, bs, data["dim"])),
              "y": jnp.zeros((tau, M, bs), jnp.int32)}
-    us_round = _time(lambda s, b: round_fn(s, b)[0], st, batch)
+    us_round = _time(lambda s, b: round_fn(s, b)[0], st, batch, n=n_it)
 
     p0 = mlp_init(key, data["dim"], data["n_classes"])
     dstate = TrainState(params=p0, opt=opt.init(p0), cstate={},
@@ -67,12 +138,22 @@ def run():
                                    total_steps=100))
     db = {"x": jnp.zeros((M, bs, data["dim"])),
           "y": jnp.zeros((M, bs), jnp.int32)}
-    us_ddp = _time(lambda s, b: ddp_fn(s, b)[0], dstate, db)
+    us_ddp = _time(lambda s, b: ddp_fn(s, b)[0], dstate, db, n=n_it)
     csv("microbench", op=f"dppf_round_tau{tau}", us_per_call=round(us_round, 1),
         derived=f"per_local_step={round(us_round / tau, 1)}")
     csv("microbench", op="ddp_step", us_per_call=round(us_ddp, 1),
         derived=f"tau_steps={round(us_ddp * tau, 1)}")
 
 
+def run(*, smoke=False):
+    bench_engine_vs_tree(smoke=smoke)
+    bench_pullpush(smoke=smoke)
+    bench_round_vs_ddp(smoke=smoke)
+
+
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes, few iterations (CI)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

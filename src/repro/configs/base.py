@@ -253,6 +253,14 @@ class DPPFConfig:
     exact_second_term: bool = False     # keep T2 (ablation §D.1)
     qsr_beta: float = 0.0       # >0 => QSR tau schedule on top (baseline)
     eps: float = 1e-12          # norm guard
+    # consensus execution engine: "tree" walks the stacked pytree (reference
+    # path), "flat" runs every method on the persistent (M, n) flat view via
+    # repro.core.engine.ConsensusEngine (DESIGN.md §Consensus-engine)
+    engine: str = "tree"
+
+    def __post_init__(self):
+        assert self.engine in ("tree", "flat"), (
+            f"unknown consensus engine {self.engine!r}")
 
     @property
     def valley_width(self) -> float:

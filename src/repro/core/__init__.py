@@ -1,6 +1,8 @@
 """DPPF core: the paper's contribution (pull-push consensus, MV measure,
 sharpness baselines, schedules, theory validation, FL couplings)."""
-from repro.core import consensus, fl, pullpush, schedules, sharpness, theory, valley
+from repro.core import (
+    consensus, engine, fl, pullpush, schedules, sharpness, theory, valley,
+)
 
-__all__ = ["consensus", "fl", "pullpush", "schedules", "sharpness", "theory",
-           "valley"]
+__all__ = ["consensus", "engine", "fl", "pullpush", "schedules", "sharpness",
+           "theory", "valley"]

@@ -14,10 +14,20 @@ Methods:
   ddp        — no round-level consensus (per-step gradient averaging,
                handled by the trainer); kept here for completeness.
 
+``apply_round`` is the single entry point. With ``engine=None`` it runs the
+stacked-pytree reference path (the parity oracle); with a
+``repro.core.engine.ConsensusEngine`` it lowers the method to one or two
+(target-weights, coefficient) stages over the persistent flat view — the
+production hot path (DESIGN.md §Consensus-engine). Both paths emit the SAME
+metrics pytree from every branch (stable under ``lax.scan``/loggers):
+``consensus_dist``, ``pre_dist``, ``pull_force``, ``push_force``.
+
 Remark 1 (paper): DPPF_lsgd with push away from x_A does NOT converge; the
 documented fix pushes away from the leader instead (push_from="leader").
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -26,15 +36,21 @@ from repro.core import pullpush as pp
 
 METHODS = ("simple_avg", "hard", "easgd", "lsgd", "mgrawa", "ddp")
 
+EASGD_BETA = 0.9  # elastic-center step (paper §7.1 baseline setting)
 
-def init_state(method, stacked):
+
+def init_state(method, stacked, *, engine=None):
+    """Per-method consensus state. With a flat engine, row-shaped state
+    (easgd's center) lives in the flat buffer's aux rows instead."""
+    if engine is not None:
+        return {}
     if method == "easgd":
         return {"center": pp.tree_mean0(stacked)}
     return {}
 
 
 def consensus_target(method, stacked, state, *, losses=None, grad_norms=None,
-                     easgd_beta=0.9):
+                     easgd_beta=EASGD_BETA):
     """Returns (x_C tree [no worker dim] or stacked, new_state, leader_idx)."""
     if method in ("simple_avg", "hard"):
         return pp.tree_mean0(stacked), state, None
@@ -60,38 +76,152 @@ def consensus_target(method, stacked, state, *, losses=None, grad_norms=None,
     raise ValueError(method)
 
 
-def apply_round(stacked, dcfg, lam_t, state, *, losses=None, grad_norms=None,
-                push_from="average"):
-    """One communication round. Returns (stacked, state, metrics)."""
+def _metrics(consensus_dist, pre_dist, pull_force, push_force):
+    """The ONE metrics schema every branch of every path emits."""
+    return {
+        "consensus_dist": jnp.asarray(consensus_dist, jnp.float32),
+        "pre_dist": jnp.asarray(pre_dist, jnp.float32),
+        "pull_force": jnp.asarray(pull_force, jnp.float32),
+        "push_force": jnp.asarray(push_force, jnp.float32),
+    }
+
+
+def apply_round(params, dcfg, lam_t, state, *, losses=None, grad_norms=None,
+                push_from="average", engine=None):
+    """One communication round. Returns (params, state, metrics).
+
+    ``params`` is a worker-stacked pytree (tree path) or the engine's flat
+    ``(R, n)`` view (flat path). Metrics keys are identical either way.
+    """
+    if engine is not None:
+        return _apply_round_flat(engine, params, dcfg, lam_t, state,
+                                 losses=losses, grad_norms=grad_norms,
+                                 push_from=push_from)
+    return _apply_round_tree(params, dcfg, lam_t, state, losses=losses,
+                             grad_norms=grad_norms, push_from=push_from)
+
+
+# ---------------------------------------------------------------------------
+# Reference path: stacked pytrees (the flat engine's parity oracle)
+# ---------------------------------------------------------------------------
+
+def _apply_round_tree(stacked, dcfg, lam_t, state, *, losses, grad_norms,
+                      push_from):
     method = dcfg.consensus
     alpha = 1.0 if method == "hard" else dcfg.alpha
 
     if method == "ddp":
-        return stacked, state, {"consensus_dist": pp.worker_dists(stacked).mean()}
+        r = pp.worker_dists(stacked).mean()
+        return stacked, state, _metrics(r, r, 0.0, 0.0)
 
     if method == "simple_avg" and dcfg.push and not dcfg.exact_second_term \
             and push_from == "average":
         new, metrics = pp.pullpush(stacked, alpha, lam_t, dcfg.eps)
-        return new, state, metrics
+        return new, state, _metrics(**{k: metrics[k] for k in (
+            "consensus_dist", "pre_dist", "pull_force", "push_force")})
 
     target, state, leader_idx = consensus_target(
         method, stacked, state, losses=losses, grad_norms=grad_norms)
+    pre = jnp.mean(pp.worker_dists(stacked))
     new = pp.pull_only(stacked, target, alpha)
 
-    metrics = {}
     if dcfg.push:
         if dcfg.exact_second_term:
             new = pp.exact_push(new, lam_t * pp.worker_dists(new).shape[0],
                                 dcfg.eps)
         elif push_from == "leader" and leader_idx is not None:
-            leader = jax.tree.map(lambda a: a.astype(jnp.float32)[leader_idx], new)
+            leader = jax.tree.map(lambda a: a.astype(jnp.float32)[leader_idx],
+                                  new)
             new = pp.push_only(new, lam_t, center=leader, eps=dcfg.eps)
         else:
             new = pp.push_only(new, lam_t, eps=dcfg.eps)
-    r = pp.worker_dists(new)
-    metrics.update({
-        "consensus_dist": jnp.mean(r),
-        "pull_force": alpha * jnp.mean(pp.worker_dists(stacked)),
-        "push_force": jnp.float32(lam_t if dcfg.push else 0.0),
-    })
-    return new, state, metrics
+    post = jnp.mean(pp.worker_dists(new))
+    return new, state, _metrics(post, pre, alpha * pre,
+                                lam_t if dcfg.push else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Flat path: thin method -> (target-weights, c0, c1) lowering over the engine
+# ---------------------------------------------------------------------------
+
+def _apply_round_flat(engine, flat, dcfg, lam_t, state, *, losses, grad_norms,
+                      push_from):
+    if engine.eps != dcfg.eps:
+        # the engine's norm guard must match the config's (tree-path parity)
+        engine = dataclasses.replace(engine, eps=dcfg.eps)
+    method = dcfg.consensus
+    alpha = 1.0 if method == "hard" else dcfg.alpha
+    L = engine.layout
+    M, R = L.M, L.R
+    eye = jnp.eye(R, dtype=jnp.float32)
+    u = engine.uniform                       # (R,) worker mean weights
+    zeros = jnp.zeros((R,), jnp.float32)
+
+    def worker_T(w):
+        """All worker rows target the combination w; aux rows stay put."""
+        T = jnp.broadcast_to(w, (R, R))
+        if L.aux:
+            T = jnp.concatenate([T[:M], eye[M:]], axis=0)
+        return T
+
+    # ---- method -> stage list ---------------------------------------------
+    stages = []      # ("coef", T, c0, c1) | ("exact", lam_r)
+    leader_w = None
+    if method != "ddp":
+        c_pull = zeros.at[:M].set(alpha)
+        if method == "simple_avg" and dcfg.push and not dcfg.exact_second_term \
+                and push_from == "average":
+            # Eq. 5: pull and push share the x_A target -> ONE fused stage
+            stages.append(("coef", worker_T(u), c_pull,
+                           zeros.at[:M].set(-lam_t)))
+        else:
+            if method in ("simple_avg", "hard"):
+                T1 = worker_T(u)
+            elif method == "easgd":
+                # every row targets z_new = (1-beta) z + beta x_A; the aux
+                # row adopts it exactly (coef 1) — the center update and the
+                # worker pull are ONE mixing stage
+                w_z = EASGD_BETA * u + (1.0 - EASGD_BETA) * eye[M]
+                T1 = jnp.broadcast_to(w_z, (R, R))
+                c_pull = c_pull.at[M:].set(1.0)
+            elif method == "lsgd":
+                assert losses is not None, "lsgd needs per-worker losses"
+                leader_w = jax.nn.one_hot(jnp.argmin(losses), R,
+                                          dtype=jnp.float32)
+                T1 = worker_T(leader_w)
+            elif method == "mgrawa":
+                assert grad_norms is not None, "mgrawa needs grad norms"
+                w = 1.0 / jnp.maximum(grad_norms, 1e-12)
+                w = w / jnp.sum(w)
+                T1 = worker_T(zeros.at[:M].set(w))
+            else:
+                raise ValueError(method)
+            stages.append(("coef", T1, c_pull, zeros))
+            if dcfg.push:
+                if dcfg.exact_second_term:
+                    stages.append(("exact", lam_t * M))
+                elif push_from == "leader" and leader_w is not None:
+                    stages.append(("coef", worker_T(leader_w), zeros,
+                                   zeros.at[:M].set(-lam_t)))
+                else:
+                    stages.append(("coef", worker_T(u), zeros,
+                                   zeros.at[:M].set(-lam_t)))
+
+    # ---- execute stages; each returns its own exact pre/post metrics ------
+    pre = post = None
+    for stage in stages:
+        if stage[0] == "coef":
+            _, T, c0, c1 = stage
+            flat, _, s_pre, s_post = engine.stage(flat, T, c0, c1)
+        else:
+            _, lam_r = stage
+            flat, _, s_pre, s_post = engine.exact_stage(flat, lam_r)
+        pre = s_pre if pre is None else pre
+        post = s_post
+
+    if post is None:                                  # ddp: metrics only
+        pre = jnp.mean(engine.dists_to_mean(flat))
+        return flat, state, _metrics(pre, pre, 0.0, 0.0)
+
+    return flat, state, _metrics(
+        post, pre, alpha * pre, lam_t if dcfg.push else 0.0)

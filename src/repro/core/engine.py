@@ -1,0 +1,307 @@
+"""ConsensusEngine: flat, one-pass consensus for every DPPF method.
+
+The round-boundary consensus update (paper §5, Eq. 5; Appendix D.1) is the
+system's hottest communication path. The tree implementation in
+``repro.core.pullpush``/``repro.core.consensus`` walks the full parameter
+pytree 2–4 times per round; the original kernel wrapper additionally
+re-materialized a flat copy via ``jnp.concatenate`` on every call.
+
+This engine keeps ONE persistent flat view for the whole training run:
+
+* ``flatten`` is called once at ``init_train_state`` — an ``(R, n)`` fp32
+  matrix whose first ``M`` rows are the workers and whose optional aux rows
+  carry row-shaped consensus state (EASGD's elastic center lives in row
+  ``M``). The treedef/shapes/offsets are cached in a static ``FlatLayout``.
+* Between rounds the buffer is donated (``jax.jit(..., donate_argnums)``),
+  so the round update runs in place — no per-round ``concatenate``.
+* Every consensus method lowers to at most two *stages*, each
+  ``x <- W @ x`` with ``W = I + diag(coef) (T - I)`` for a row-stochastic
+  target-weight matrix ``T`` and ``coef = c0 + c1 / max(r, eps)``:
+
+    method      target weights T (worker rows)     c0      c1
+    ----------  ---------------------------------  ------  ------
+    simple_avg  uniform 1/M                        alpha   -lam   (Eq. 5, fused)
+    hard        uniform 1/M                        1       0
+    easgd       beta*u + (1-beta)*e_z  (z = aux)   alpha   0      (+push stage)
+    lsgd        one_hot(argmin losses)             alpha   0      (+push stage)
+    mgrawa      w_m ∝ 1/||grad_m||                 alpha   0      (+push stage)
+    push stage  uniform 1/M (or leader)            0       -lam
+    ddp         (identity; metrics only)
+
+* All distances are zero-sum quadratic forms of the Gram matrix
+  ``G = X X^T``: ``||x_i - T_i x||^2 = v^T G v`` with ``v = e_i - T_i``,
+  ``sum(v) = 0``. One Gram (one read of X, MXU-friendly) prices every
+  worker's distance for any target at once; the apply is one more GEMM.
+  The Pallas path (`kernels.pullpush.fused_round`) runs both phases in a
+  single ``pallas_call`` with a *block-centered* Gram, which makes the
+  zero-sum forms cancellation-free everywhere. The fast jnp path uses the
+  uncentered Gram, whose fp32 forms resolve r only down to
+  ~sqrt(eps32) * ||x||: stage distances are floored at that resolution
+  (GRAM_NOISE_FACTOR), so a collapsed fleet under-pushes, escaping the
+  window geometrically instead of pushing along rounding noise — the one
+  documented deviation from the tree oracle, transient and only below
+  ~0.4% of the parameter norm.
+  ``precise=True`` selects exact gap-space stages instead (one extra
+  (R, n) buffer per round) for bit-level parity at every scale.
+
+Method semantics (incl. push-from-recomputed-center ordering) mirror
+``repro.core.consensus.apply_round``'s tree path, which remains the parity
+oracle. See DESIGN.md §Consensus-engine.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FlatLayout:
+    """Static description of the flat view (hashable; safe as jit aux data)."""
+    treedef: Any
+    shapes: Tuple[Tuple[int, ...], ...]   # per-leaf shapes WITHOUT worker dim
+    dtypes: Tuple[str, ...]
+    offsets: Tuple[int, ...]
+    n: int            # parameters per worker
+    M: int            # workers
+    aux: int = 0      # extra state rows (easgd center)
+
+    @property
+    def R(self) -> int:
+        return self.M + self.aux
+
+
+# The uncentered Gram resolves squared distances only down to
+# ~eps32 * max||x_i||^2. The fast jnp path floors every stage distance at
+# GRAM_NOISE_FACTOR times that resolution (r_floor ~ 0.4% of the parameter
+# norm): sub-resolution distances are treated as at-resolution, so a
+# collapsed fleet under-pushes — escaping the window geometrically
+# (|1 - coef| per round, O(log(r_floor/r0)) rounds) instead of pushing
+# along rounding noise. Above r_floor the path is accurate; ``precise=
+# True`` (gap-space) and the kernel path (block-centered Gram) are exact
+# at every scale.
+GRAM_NOISE_FACTOR = 256.0
+_EPS32 = float(jnp.finfo(jnp.float32).eps)
+
+
+@dataclass(frozen=True)
+class ConsensusEngine:
+    layout: FlatLayout
+    use_kernel: bool = False      # Pallas fused_round vs jnp Gram+GEMM
+    interpret: bool = True        # Pallas interpret mode (CPU)
+    precise: bool = False         # jnp path: exact gap-space stages
+    block_cols: int = 2048
+    eps: float = 1e-12
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_stacked(cls, stacked, *, method: str = "simple_avg", **kw):
+        """Build the layout from a worker-stacked pytree (leaves (M, ...))."""
+        leaves, treedef = jax.tree_util.tree_flatten(stacked)
+        M = leaves[0].shape[0]
+        shapes = tuple(tuple(l.shape[1:]) for l in leaves)
+        dtypes = tuple(str(l.dtype) for l in leaves)
+        sizes = [math.prod(s) for s in shapes]
+        offsets, o = [], 0
+        for s in sizes:
+            offsets.append(o)
+            o += s
+        aux = 1 if method == "easgd" else 0
+        # the fused kernel is TPU-targeted: compile it there, interpret it
+        # when explicitly requested elsewhere (tests); CPU/GPU default to
+        # the jnp Gram+GEMM path
+        backend = jax.default_backend()
+        if "use_kernel" not in kw:
+            kw["use_kernel"] = backend == "tpu"
+        if "interpret" not in kw:
+            kw["interpret"] = backend != "tpu"
+        layout = FlatLayout(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                            offsets=tuple(offsets), n=o, M=M, aux=aux)
+        return cls(layout=layout, **kw)
+
+    # -- flat view management (flatten happens ONCE per training run) -------
+
+    def flatten(self, stacked):
+        """Stacked pytree -> (R, n) fp32. Aux rows are initialized here
+        (easgd: elastic center = worker mean)."""
+        leaves = jax.tree_util.tree_leaves(stacked)
+        M = self.layout.M
+        flat = jnp.concatenate(
+            [l.reshape(M, -1).astype(jnp.float32) for l in leaves], axis=1)
+        if self.layout.aux:
+            flat = jnp.concatenate(
+                [flat, jnp.mean(flat, axis=0, keepdims=True)], axis=0)
+        return flat
+
+    def unflatten(self, flat):
+        """Worker rows of the flat view -> stacked pytree (original dtypes)."""
+        L = self.layout
+        rows = flat[:L.M]
+        out = [rows[:, off:off + math.prod(shape)]
+               .reshape((L.M,) + shape).astype(dtype)
+               for shape, dtype, off in zip(L.shapes, L.dtypes, L.offsets)]
+        return jax.tree_util.tree_unflatten(L.treedef, out)
+
+    def unflatten_row(self, row, *, cast=True):
+        """One (n,) row -> parameter pytree without the worker dim.
+        ``cast=False`` keeps the engine's fp32 leaves (e.g. the averaged
+        final model, matching the tree path's fp32 ``tree_mean0``)."""
+        L = self.layout
+        out = [row[off:off + math.prod(shape)].reshape(shape)
+               .astype(dtype if cast else jnp.float32)
+               for shape, dtype, off in zip(L.shapes, L.dtypes, L.offsets)]
+        return jax.tree_util.tree_unflatten(L.treedef, out)
+
+    def workers(self, flat):
+        return flat[:self.layout.M]
+
+    def with_workers(self, flat, rows):
+        """Write updated worker rows back into the (donated) flat buffer."""
+        if not self.layout.aux:
+            return rows
+        return jax.lax.dynamic_update_slice(flat, rows, (0, 0))
+
+    # -- flat math primitives ------------------------------------------------
+
+    @property
+    def uniform(self):
+        """(R,) uniform weights over worker rows (zeros on aux rows)."""
+        L = self.layout
+        return jnp.zeros((L.R,), jnp.float32).at[:L.M].set(1.0 / L.M)
+
+    def gram(self, flat):
+        """(R, R) uncentered Gram. Only zero-sum quadratic forms of it are
+        meaningful; their fp32 noise floor is ~eps32 * max diag (see
+        GRAM_NOISE_FACTOR and the module docstring)."""
+        f = flat.astype(jnp.float32)
+        return f @ f.T
+
+    @staticmethod
+    def sq_forms(G, V):
+        """r2_i = V_i^T G V_i for each row of V. For an uncentered or
+        block-centered Gram the rows must sum to 0 (shift invariance); for
+        a gap Gram any V is valid."""
+        return jnp.maximum(jnp.sum((V @ G) * V, axis=1), 0.0)
+
+    def mix(self, flat, W):
+        """x <- W @ x (one GEMM over the flat view)."""
+        return W.astype(jnp.float32) @ flat
+
+    def _gap_stage(self, flat, T, c0, c1):
+        """Exact (``precise=True``) stage: materialize the targets
+        ``tx = T x`` and work in gap space — distances are
+        ``diag((tx - x)(tx - x)^T)`` (cancellation-free by construction),
+        the apply is the uniform form ``tx + (1 - c)(x - tx)`` (exact both
+        for c = 1, reproducing the target bitwise, and for huge |c|, which
+        scales a difference of nearby values), and the pre/post metrics are
+        forms over the gap Gram. One extra (R, n) buffer + read vs the fast
+        path.
+
+        Requires (true of every lowering) that all worker rows of T share
+        one weight vector w, so d_m = x_m - mean = (e_m - u)^T g.
+        """
+        R, M = self.layout.R, self.layout.M
+        eye = jnp.eye(R, dtype=jnp.float32)
+        u = self.uniform
+        # T @ x then subtract — NOT (T - I) @ x: the row-stochastic dot is
+        # clean (collapsed identical rows reproduce exactly, e.g. after a
+        # hard pull) and the subtraction of nearby values is exact, so a
+        # degenerate gap is a true zero, matching the tree path's d = x - a
+        tx = T @ flat
+        g = tx - flat
+        Gg = g @ g.T
+        r = jnp.sqrt(jnp.maximum(jnp.diagonal(Gg), 0.0))
+        coef = c0 + c1 / jnp.maximum(r, self.eps)
+        new = tx + (1.0 - coef)[:, None] * (flat - tx)
+        # d_m = (u - e_m)^T g;  new_m - mean(new) = ((coef_m - 1) e_m
+        #   + u * (1 - coef))^T g  — both exact forms over the gap Gram
+        V_pre = jnp.broadcast_to(u, (R, R)) - eye
+        pre = jnp.mean(jnp.sqrt(self.sq_forms(Gg, V_pre)[:M]))
+        V_post = jnp.diag(coef - 1.0) + jnp.broadcast_to(u * (1.0 - coef),
+                                                         (R, R))
+        post = jnp.mean(jnp.sqrt(self.sq_forms(Gg, V_post)[:M]))
+        return new, r, pre, post
+
+    def stage(self, flat, T, c0, c1):
+        """One fused consensus stage.
+
+        Per row i: ``r_i = ||x_i - T_i x||``, ``coef_i = c0_i + c1_i /
+        max(r_i, eps)``, ``x_i <- x_i + coef_i (T_i x - x_i)``.
+        Returns ``(new_flat, r, pre_dist, post_dist)`` — pre/post are the
+        mean worker distance to the worker mean before/after the stage.
+
+        Fast jnp path: one Gram + one mixing GEMM, with every distance
+        floored at the Gram's fp32 resolution (module docstring — the only
+        divergence from the tree oracle, transient and geometrically
+        escaped). ``precise=True``: exact gap-space stages. Kernel path:
+        one two-phase ``pallas_call``, block-centered Gram, exact.
+        """
+        R, M = self.layout.R, self.layout.M
+        eye = jnp.eye(R, dtype=jnp.float32)
+        u = self.uniform
+        Vu = eye - jnp.broadcast_to(u, (R, R))
+
+        if self.use_kernel:
+            from repro.kernels.pullpush import pullpush as pk
+            new, r, G = pk.fused_round(flat, T, c0, c1, eps=self.eps,
+                                       block_cols=self.block_cols,
+                                       interpret=self.interpret)
+            coef = c0 + c1 / jnp.maximum(r, self.eps)
+            W = eye + coef[:, None] * (T - eye)
+            pre = jnp.mean(jnp.sqrt(self.sq_forms(G, Vu)[:M]))
+            post = jnp.mean(jnp.sqrt(self.sq_forms(G, Vu @ W)[:M]))
+            return new, r, pre, post
+
+        if self.precise:
+            return self._gap_stage(flat, T, c0, c1)
+
+        G = self.gram(flat)
+        # the floor guards coef only — metrics report the (clamped) forms
+        floor = GRAM_NOISE_FACTOR * _EPS32 * jnp.max(jnp.diagonal(G))
+        r = jnp.sqrt(jnp.maximum(self.sq_forms(G, eye - T), floor))
+        coef = c0 + c1 / jnp.maximum(r, self.eps)
+        W = eye + coef[:, None] * (T - eye)
+        pre = jnp.mean(jnp.sqrt(self.sq_forms(G, Vu)[:M]))
+        post = jnp.mean(jnp.sqrt(self.sq_forms(G, Vu @ W)[:M]))
+        return self.mix(flat, W), r, pre, post
+
+    def exact_stage(self, flat, lam_r):
+        """Exact two-term push (Appendix E.1): x_m += (lam_r / M)
+        (u_m - mean u), u_m = (x_m - mean x)/r_m. Gap-space (exact);
+        ablation path, not the round hot path.
+        Returns ``(new_flat, r, pre_dist, post_dist)``.
+        """
+        R, M = self.layout.R, self.layout.M
+        eye = jnp.eye(R, dtype=jnp.float32)
+        u = self.uniform
+        T = jnp.broadcast_to(u, (R, R))
+        if self.layout.aux:
+            T = jnp.concatenate([T[:M], eye[M:]], axis=0)
+        g = T @ flat - flat                       # worker rows: mean - x_m
+        Gg = g @ g.T
+        r = jnp.sqrt(jnp.maximum(jnp.diagonal(Gg), 0.0))
+        inv = 1.0 / jnp.maximum(r, self.eps)
+        units = -g[:M] * inv[:M, None]            # (x_m - mean)/r_m
+        mean_unit = jnp.mean(units, axis=0, keepdims=True)
+        upd = (lam_r / M) * (units - mean_unit)
+        new = flat.at[:M].add(upd) if self.layout.aux else flat + upd
+        # pre = r (target IS the worker mean). The push preserves the mean,
+        # so new_m - mean(new) = (-(1 + (lam_r/M) inv_m) e_m
+        #   + (lam_r/M)(u * inv))^T g — an exact form over the gap Gram.
+        pre = jnp.mean(r[:M])
+        iv = jnp.where(jnp.arange(R) < M, inv, 0.0)
+        V_post = (-jnp.diag(1.0 + (lam_r / M) * iv)
+                  + (lam_r / M) * jnp.broadcast_to(u * iv, (R, R)))
+        post = jnp.mean(jnp.sqrt(self.sq_forms(Gg, V_post)[:M]))
+        return new, r, pre, post
+
+    def dists_to_mean(self, flat):
+        """Exact per-worker distances to the worker mean (gap-space)."""
+        R, M = self.layout.R, self.layout.M
+        u = self.uniform
+        g = jnp.broadcast_to(u, (R, R)) @ flat - flat
+        return jnp.sqrt(jnp.maximum(jnp.diagonal(g @ g.T), 0.0))[:M]

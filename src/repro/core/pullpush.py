@@ -4,6 +4,11 @@ All functions operate on *worker-stacked* parameter pytrees: every leaf has
 a leading worker dimension M. On the production mesh that dimension is
 sharded over the worker axes, so ``jnp.mean(..., axis=0)`` here lowers to
 the round's single all-reduce — the only data-axis collective in DPPF.
+
+This module (with ``consensus.apply_round(engine=None)``) is the REFERENCE
+path: the production hot path runs the same math on the persistent flat
+view via ``repro.core.engine.ConsensusEngine`` (DESIGN.md §Consensus-engine)
+and is parity-tested against it per method in tests/test_engine.py.
 """
 from __future__ import annotations
 

@@ -1,6 +1,8 @@
 from repro.kernels.pullpush.ops import pullpush_fused
-from repro.kernels.pullpush.pullpush import apply_update, sq_dist
-from repro.kernels.pullpush.ref import apply_ref, pullpush_ref, sq_dist_ref
+from repro.kernels.pullpush.pullpush import apply_update, fused_round, sq_dist
+from repro.kernels.pullpush.ref import (
+    apply_ref, fused_round_ref, pullpush_ref, sq_dist_ref,
+)
 
-__all__ = ["apply_ref", "apply_update", "pullpush_fused", "pullpush_ref",
-           "sq_dist", "sq_dist_ref"]
+__all__ = ["apply_ref", "apply_update", "fused_round", "fused_round_ref",
+           "pullpush_fused", "pullpush_ref", "sq_dist", "sq_dist_ref"]

@@ -1,8 +1,15 @@
 """jit'd public wrapper: fused DPPF consensus over worker-stacked pytrees.
 
-``pullpush_kernel(stacked, alpha, lam)`` mirrors
-``repro.core.pullpush.pullpush`` but routes the flat per-worker math through
-the Pallas kernels (interpret=True on CPU; compiled on TPU).
+``pullpush_fused(stacked, alpha, lam)`` mirrors
+``repro.core.pullpush.pullpush`` but routes the math through the flat
+ConsensusEngine (one ``fused_round`` Pallas call, or the Gram+GEMM jnp
+path with ``use_kernel=False``).
+
+This is the convenience entry point for a one-off call on a pytree — it
+flattens per call. The training hot path does NOT go through here: the
+trainer holds the engine's persistent flat view and calls
+``consensus.apply_round(..., engine=...)`` directly, so the flatten happens
+once per run (DESIGN.md §Consensus-engine).
 """
 from __future__ import annotations
 
@@ -11,46 +18,26 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pullpush import pullpush as k
-from repro.kernels.pullpush import ref
+from repro.core.engine import ConsensusEngine
 
 
-def _flatten_workers(stacked):
-    """(M, n) flat view + unflatten closure."""
-    leaves, treedef = jax.tree_util.tree_flatten(stacked)
-    M = leaves[0].shape[0]
-    flat = jnp.concatenate(
-        [l.reshape(M, -1).astype(jnp.float32) for l in leaves], axis=1)
-
-    def unflatten(flat_new):
-        out, i = [], 0
-        for l in leaves:
-            n = l[0].size
-            out.append(flat_new[:, i:i + n].reshape(l.shape).astype(l.dtype))
-            i += n
-        return jax.tree_util.tree_unflatten(treedef, out)
-
-    return flat, unflatten
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
-def pullpush_fused(stacked, alpha, lam, eps=1e-12, *, interpret=True,
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "interpret", "use_kernel"))
+def pullpush_fused(stacked, alpha, lam, *, eps=1e-12, interpret=True,
                    use_kernel=True):
-    """Eq. 5 over a worker-stacked pytree via the Pallas kernels.
-    Returns (new_stacked, per-worker distances)."""
-    flat, unflatten = _flatten_workers(stacked)
-    a = jnp.mean(flat, axis=0)  # consensus all-reduce
+    """Eq. 5 over a worker-stacked pytree via the consensus engine.
+    Returns (new_stacked, per-worker distances).
 
-    if use_kernel:
-        sq = jax.vmap(lambda x: k.sq_dist(x, a, interpret=interpret))(flat)
-    else:
-        sq = jax.vmap(lambda x: ref.sq_dist_ref(x, a))(flat)
-    r = jnp.sqrt(sq)
-    coef = alpha - lam / jnp.maximum(r, eps)
-
-    if use_kernel:
-        new = jax.vmap(lambda x, c: k.apply_update(x, a, c,
-                                                   interpret=interpret))(flat, coef)
-    else:
-        new = jax.vmap(lambda x, c: ref.apply_ref(x, a, c))(flat, coef)
-    return unflatten(new), r
+    The jnp branch uses the engine's exact gap-space stages (this wrapper
+    flattens per call anyway, so the fast path's persistent-buffer economy
+    doesn't apply — keep plain Eq. 5 semantics at every scale)."""
+    engine = ConsensusEngine.from_stacked(
+        stacked, use_kernel=use_kernel, interpret=interpret, eps=eps,
+        precise=True)
+    flat = engine.flatten(stacked)
+    M = engine.layout.M
+    T = jnp.broadcast_to(engine.uniform, (M, M))
+    alpha = jnp.broadcast_to(jnp.asarray(alpha, jnp.float32), (M,))
+    lam = jnp.broadcast_to(jnp.asarray(lam, jnp.float32), (M,))
+    new, r, _, _ = engine.stage(flat, T, alpha, -lam)
+    return engine.unflatten(new), r

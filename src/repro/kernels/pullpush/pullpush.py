@@ -1,17 +1,23 @@
-"""Pallas TPU kernel for the fused DPPF pull-push consensus update.
+"""Pallas TPU kernels for the DPPF consensus hot path.
 
 DPPF's consensus is memory-bound: it touches every parameter of every
-worker once for the distance and once for the update. The TPU-native
-formulation (DESIGN.md §5):
+worker once for the distance and once for the update. Two generations of
+kernels live here (DESIGN.md §Consensus-engine):
 
-  phase 1 (sq_dist): grid over row blocks of the (rows, 128) padded view;
-    each step accumulates a partial sum-of-squares into an SMEM scalar
-    accumulator — one HBM read of x and a.
-  phase 2 (apply): one fused read-modify-write pass computing
-    x + (a - x) * coef with the scalar coef prefetched.
+* ``sq_dist`` / ``apply_update`` — the original per-vector pair: a blockwise
+  sum-of-squares reduction and a separate fused read-modify-write pass.
+  Kept as the minimal reference kernels (and for their tests).
 
-Block shape (BLOCK_ROWS, 128) keeps the working set in VMEM and the lane
-dimension hardware-aligned.
+* ``fused_round`` — the ConsensusEngine kernel: ONE ``pallas_call`` whose
+  grid runs two phases over the same column blocks of the flat ``(R, n)``
+  worker matrix. Phase 0 accumulates a block-centered Gram matrix (distances
+  for *all* rows in one read); phase 1 derives the per-row pull/push
+  coefficients from the Gram in-kernel and applies the row-mixing update in
+  one read-modify-write pass. This replaces the per-worker
+  ``sq_dist`` + ``apply_update`` pair and their duplicated padding logic.
+
+Block shape (rows, LANE)/(rows, block_cols) keeps the working set in VMEM
+and the lane dimension hardware-aligned.
 """
 from __future__ import annotations
 
@@ -20,10 +26,48 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 LANE = 128
 BLOCK_ROWS = 256  # 256*128*4B*2 tensors = 256 KiB of VMEM per step
+SUBLANE = 8       # fp32 sublane quantum: row counts are padded to this
 
+
+def _round_up(x, m):
+    return -(-x // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Shared padding helpers (used by every kernel below)
+# ---------------------------------------------------------------------------
+
+def _pad_view(x):
+    """(n,) -> lane-aligned (rows, LANE) view. Returns (view, n)."""
+    n = x.shape[0]
+    rows = _round_up(n, LANE) // LANE
+    pad = rows * LANE - n
+    xp = jnp.pad(x, (0, pad)) if pad else x
+    return xp.reshape(rows, LANE), n
+
+
+def _pad_grid(views, block_rows=BLOCK_ROWS):
+    """Pad (rows, LANE) views to a whole number of row blocks.
+
+    Returns (padded_views, grid) — the single source of the grid/padding
+    arithmetic that used to be copied between ``sq_dist`` and
+    ``apply_update``.
+    """
+    rows = views[0].shape[0]
+    grid = _round_up(rows, block_rows) // block_rows
+    pad_r = grid * block_rows - rows
+    if pad_r:
+        views = [jnp.pad(v, ((0, pad_r), (0, 0))) for v in views]
+    return views, grid
+
+
+# ---------------------------------------------------------------------------
+# Reference pair: separate distance + apply kernels
+# ---------------------------------------------------------------------------
 
 def _sq_dist_kernel(x_ref, a_ref, o_ref):
     # the (1,) output block maps to the same slot every grid step, so it
@@ -42,25 +86,12 @@ def _apply_kernel(coef_ref, x_ref, a_ref, o_ref):
     o_ref[...] = (xf + (af - xf) * coef_ref[0]).astype(o_ref.dtype)
 
 
-def _pad_view(x):
-    n = x.shape[0]
-    rows = -(-n // LANE)
-    pad = rows * LANE - n
-    xp = jnp.pad(x, (0, pad)) if pad else x
-    return xp.reshape(rows, LANE), n
-
-
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def sq_dist(x, a, *, interpret=True):
     """||x - a||^2 via the blockwise reduction kernel. x, a: (n,)."""
     xv, _ = _pad_view(x)
     av, _ = _pad_view(a)
-    rows = xv.shape[0]
-    grid = -(-rows // BLOCK_ROWS)
-    if rows % BLOCK_ROWS:
-        pad_r = grid * BLOCK_ROWS - rows
-        xv = jnp.pad(xv, ((0, pad_r), (0, 0)))
-        av = jnp.pad(av, ((0, pad_r), (0, 0)))
+    (xv, av), grid = _pad_grid([xv, av])
     out = pl.pallas_call(
         _sq_dist_kernel,
         grid=(grid,),
@@ -80,12 +111,7 @@ def apply_update(x, a, coef, *, interpret=True):
     """out = x + (a - x) * coef in one fused pass. x, a: (n,)."""
     xv, n = _pad_view(x)
     av, _ = _pad_view(a)
-    rows = xv.shape[0]
-    grid = -(-rows // BLOCK_ROWS)
-    if rows % BLOCK_ROWS:
-        pad_r = grid * BLOCK_ROWS - rows
-        xv = jnp.pad(xv, ((0, pad_r), (0, 0)))
-        av = jnp.pad(av, ((0, pad_r), (0, 0)))
+    (xv, av), grid = _pad_grid([xv, av])
     coef = jnp.asarray(coef, jnp.float32).reshape(1)
     out = pl.pallas_call(
         _apply_kernel,
@@ -100,3 +126,125 @@ def apply_update(x, a, coef, *, interpret=True):
         interpret=interpret,
     )(coef, xv, av)
     return out.reshape(-1)[:n]
+
+
+# ---------------------------------------------------------------------------
+# ConsensusEngine kernel: one pallas_call, two phases over one grid
+# ---------------------------------------------------------------------------
+
+def _eye(n, dtype=jnp.float32):
+    """2D-iota identity (TPU requires >=2D iota inside kernels)."""
+    r = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    return (r == c).astype(dtype)
+
+
+def _fused_round_kernel(x_ref, t_ref, c0_ref, c1_ref,
+                        o_ref, r_ref, g_ref, g_acc, coef_scr, *, eps):
+    phase = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((phase == 0) & (j == 0))
+    def _init():
+        g_acc[...] = jnp.zeros_like(g_acc)
+
+    @pl.when(phase == 0)
+    def _gram():
+        x = x_ref[...]
+        # Block-centered Gram: shifting every column by its row-0 value is
+        # free (loaded block is in VMEM) and removes the catastrophic
+        # cancellation of an uncentered x @ x.T — entries are O(spread^2),
+        # not O(||x||^2). Any zero-sum quadratic form of G is exact.
+        e = x - x[0:1, :]
+        g_acc[...] += jnp.dot(e, e.T, preferred_element_type=jnp.float32)
+        o_ref[...] = x  # placeholder; phase 1 overwrites every block
+
+    @pl.when((phase == 1) & (j == 0))
+    def _coef():
+        G = g_acc[...]
+        T = t_ref[...]
+        R = G.shape[0]
+        eye = _eye(R)
+        # r^2_i = (e_i - T_i)^T G (e_i - T_i), vectorized over rows.
+        tg = jnp.dot(T, G, preferred_element_type=jnp.float32)
+        diag_g = jnp.sum(G * eye, axis=1, keepdims=True)
+        diag_tg = jnp.sum(T * G, axis=1, keepdims=True)       # G symmetric
+        diag_tgt = jnp.sum(tg * T, axis=1, keepdims=True)
+        r2 = diag_g - 2.0 * diag_tg + diag_tgt
+        r = jnp.sqrt(jnp.maximum(r2, 0.0))
+        coef_scr[...] = c0_ref[...] + c1_ref[...] / jnp.maximum(r, eps)
+        r_ref[...] = r
+        g_ref[...] = G
+
+    @pl.when(phase == 1)
+    def _apply():
+        # uniform gap form tx + (1-c)(x - tx): the row-stochastic dot
+        # accumulates O(||x||) terms (no |c| amplification), c = 1
+        # reproduces the target bitwise (hard pull), and a huge |c| scales
+        # a difference of nearby values — exact in every regime, unlike a
+        # single W @ x GEMM whose rounding grows with |c| * ||x||
+        x = x_ref[...]
+        c = coef_scr[...]
+        tx = jnp.dot(t_ref[...], x, preferred_element_type=jnp.float32)
+        o_ref[...] = tx + (1.0 - c) * (x - tx)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("eps", "block_cols", "interpret"))
+def fused_round(flat, T, c0, c1, *, eps=1e-12, block_cols=2048,
+                interpret=True):
+    """One consensus stage over the flat (R, n) worker matrix, fused.
+
+    Per row i: ``r_i = ||x_i - T_i @ x||``, ``coef_i = c0_i + c1_i /
+    max(r_i, eps)``, ``out_i = x_i + coef_i * (T_i @ x - x_i)`` — i.e. one
+    row-mixing ``W @ x`` with ``W = I + diag(coef) (T - I)``. ``T`` must be
+    row-stochastic (rows sum to 1); that makes every distance a zero-sum
+    quadratic form of the Gram, which the block-centering computes exactly.
+
+    Single ``pallas_call``, grid (2, n_blocks): phase 0 accumulates the
+    Gram (one HBM read of x), phase 1 applies the mixing (one more read +
+    the only write). Returns ``(out (R, n) f32, r (R,), G (R, R))`` — G is
+    the *block-centered* Gram: only zero-sum quadratic forms of it are
+    meaningful (see repro/core/engine.py).
+    """
+    R, n = flat.shape
+    Rp = _round_up(max(R, SUBLANE), SUBLANE)
+    bc = min(block_cols, _round_up(n, LANE))
+    nb = _round_up(n, bc) // bc
+    xp = jnp.pad(flat.astype(jnp.float32),
+                 ((0, Rp - R), (0, nb * bc - n)))
+    # pad rows: identity target + zero coefs => rows (and G forms) inert
+    tp = jnp.zeros((Rp, Rp), jnp.float32).at[:R, :R].set(
+        T.astype(jnp.float32))
+    tp = tp + jnp.diag((jnp.arange(Rp) >= R).astype(jnp.float32))
+    c0p = jnp.zeros((Rp, 1), jnp.float32).at[:R, 0].set(
+        jnp.broadcast_to(jnp.asarray(c0, jnp.float32), (R,)))
+    c1p = jnp.zeros((Rp, 1), jnp.float32).at[:R, 0].set(
+        jnp.broadcast_to(jnp.asarray(c1, jnp.float32), (R,)))
+
+    out, r, G = pl.pallas_call(
+        functools.partial(_fused_round_kernel, eps=eps),
+        grid=(2, nb),
+        in_specs=[
+            pl.BlockSpec((Rp, bc), lambda p, j: (0, j)),
+            pl.BlockSpec((Rp, Rp), lambda p, j: (0, 0)),
+            pl.BlockSpec((Rp, 1), lambda p, j: (0, 0)),
+            pl.BlockSpec((Rp, 1), lambda p, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Rp, bc), lambda p, j: (0, j)),
+            pl.BlockSpec((Rp, 1), lambda p, j: (0, 0)),
+            pl.BlockSpec((Rp, Rp), lambda p, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Rp, nb * bc), jnp.float32),
+            jax.ShapeDtypeStruct((Rp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Rp, Rp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((Rp, Rp), jnp.float32),   # Gram accumulator
+            pltpu.VMEM((Rp, 1), jnp.float32),    # per-row coefficients
+        ],
+        interpret=interpret,
+    )(xp, tp, c0p, c1p)
+    return out[:R, :n], r[:R, 0], G[:R, :R]

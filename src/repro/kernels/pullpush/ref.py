@@ -1,12 +1,12 @@
-"""Pure-jnp oracle for the fused DPPF pull-push consensus kernel.
+"""Pure-jnp oracles for the DPPF consensus kernels.
 
 Semantics (paper Eq. 5, per worker, flat parameter vector):
     r    = ||x - a||_2
     coef = alpha - lam / max(r, eps)
     out  = x + (a - x) * coef
 The naive jnp version issues >= 4 HBM passes over x (sub, square-reduce,
-then read x and a again for the update); the Pallas kernel fuses each phase
-into a single pass (see pullpush.py).
+then read x and a again for the update); the Pallas kernels fuse the work
+into one or two passes (see pullpush.py).
 """
 from __future__ import annotations
 
@@ -30,3 +30,19 @@ def pullpush_ref(x, a, alpha, lam, eps=1e-12):
     r = jnp.sqrt(sq_dist_ref(x, a))
     coef = alpha - lam / jnp.maximum(r, eps)
     return apply_ref(x, a, coef), r
+
+
+def fused_round_ref(flat, T, c0, c1, eps=1e-12):
+    """Oracle for ``pullpush.fused_round`` (without the centered-Gram trick).
+
+    flat (R, n); T (R, R) row-stochastic; c0, c1 scalars or (R,).
+    Returns (out, r) — r_i = ||x_i - T_i @ x||.
+    """
+    f = flat.astype(jnp.float32)
+    targets = T.astype(jnp.float32) @ f
+    r = jnp.sqrt(jnp.sum(jnp.square(f - targets), axis=1))
+    coef = (jnp.broadcast_to(jnp.asarray(c0, jnp.float32), r.shape)
+            + jnp.asarray(c1, jnp.float32) / jnp.maximum(r, eps))
+    # same uniform gap form as the kernel: exact at c = 1 and for huge |c|
+    out = targets + (1.0 - coef)[:, None] * (f - targets)
+    return out, r

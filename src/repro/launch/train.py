@@ -37,6 +37,9 @@ def main(argv=None):
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--lam", type=float, default=0.5)
     ap.add_argument("--consensus", default="simple_avg")
+    ap.add_argument("--engine", default="flat", choices=["tree", "flat"],
+                    help="consensus execution engine (flat = persistent "
+                         "(M, n) view + fused Gram/mixing round update)")
     ap.add_argument("--lam-schedule", default="increasing")
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
     ap.add_argument("--sam-rho", type=float, default=0.0)
@@ -67,7 +70,7 @@ def main(argv=None):
 
     task = TokenTask(vocab_size=cfg.vocab_size, seq_len=args.seq)
     dcfg = DPPFConfig(alpha=args.alpha, lam=args.lam, tau=args.tau,
-                      consensus=args.consensus,
+                      consensus=args.consensus, engine=args.engine,
                       lam_schedule=args.lam_schedule)
     opt = make_optimizer(args.optimizer, momentum=0.9, weight_decay=1e-3)
     key = jax.random.PRNGKey(args.seed)
@@ -91,10 +94,13 @@ def main(argv=None):
         final = state.params
     else:
         state = init_train_state(model.init, opt, dcfg, args.workers, key)
+        # donation keeps the flat engine's (R, n) view (and the opt state)
+        # in place across rounds — no per-round copies of the parameters
         step = jax.jit(make_round_step(model.loss, opt, dcfg,
                                        base_lr=args.lr,
                                        total_steps=args.steps,
-                                       sam_rho=args.sam_rho))
+                                       sam_rho=args.sam_rho),
+                       donate_argnums=0)
         rounds = max(args.steps // args.tau, 1)
         for r in range(rounds):
             batch = make_round_batch(task, args.seed, args.workers, args.tau,

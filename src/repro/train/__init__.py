@@ -1,6 +1,7 @@
 from repro.train.trainer import (
-    TrainState, init_train_state, make_ddp_step, make_round_step,
+    TrainState, average_params, init_train_state, make_ddp_step,
+    make_round_step, stacked_params,
 )
 
-__all__ = ["TrainState", "init_train_state", "make_ddp_step",
-           "make_round_step"]
+__all__ = ["TrainState", "average_params", "init_train_state",
+           "make_ddp_step", "make_round_step", "stacked_params"]

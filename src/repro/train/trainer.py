@@ -7,28 +7,45 @@ mean over the worker axis lowers to the classic every-step all-reduce.
 Both are generic over ``loss_fn(params, batch) -> (loss, metrics)`` so the
 same trainer drives the 10 assigned LM architectures and the small
 paper-table stand-in models.
+
+With ``DPPFConfig.engine == "flat"`` the worker parameters live in the
+ConsensusEngine's persistent ``(R, n)`` fp32 view for the WHOLE run: it is
+built once in ``init_train_state``, local steps differentiate through cheap
+slice/reshape views of it (``engine.unflatten_row``), and the consensus
+update runs as flat Gram+mixing passes — no per-round flatten/concatenate.
+Donate the state (``jax.jit(round_step, donate_argnums=0)``) so the buffer
+is reused in place across rounds (DESIGN.md §Consensus-engine).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Optional
+from dataclasses import dataclass
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import DPPFConfig
 from repro.core import consensus
+from repro.core.engine import ConsensusEngine
 from repro.core.schedules import cosine_lr, lam_schedule
 from repro.optim import Optimizer, sam_gradient
 
 
-@jax.tree_util.register_dataclass
 @dataclass
 class TrainState:
-    params: Any          # worker-stacked (M, ...) for DPPF; flat for DDP
+    params: Any          # worker-stacked (M, ...) for DPPF; flat for DDP;
+                         # the engine's (R, n) flat view when engine is set
     opt: Any
     cstate: Any          # consensus state (EASGD center etc.)
     t: jnp.ndarray       # local-step counter (scalar int32)
+    engine: Any = None   # ConsensusEngine (static metadata) or None
+
+
+# ``engine`` is hashable static metadata: jit recompiles if the layout
+# changes, and donation/vmap only ever see the array fields.
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=("params", "opt", "cstate", "t"),
+    meta_fields=("engine",))
 
 
 def _grad_norm(grads):
@@ -37,10 +54,15 @@ def _grad_norm(grads):
 
 
 def init_train_state(loss_params_init, opt: Optimizer, dcfg: DPPFConfig,
-                     n_workers: int, key, *, same_init=True):
+                     n_workers: int, key, *, same_init=True, engine=None):
     """Stack per-worker params. The paper initializes all workers from the
     same random model (Alg. 1); ``same_init=False`` gives per-worker seeds
-    (useful for the width ablations)."""
+    (useful for the width ablations).
+
+    With ``dcfg.engine == "flat"`` (or an explicit ``engine``) the stacked
+    tree is flattened ONCE here into the engine's persistent (R, n) view;
+    every subsequent round reuses/donates that buffer.
+    """
     if same_init:
         p0 = loss_params_init(key)
         params = jax.tree.map(
@@ -50,10 +72,19 @@ def init_train_state(loss_params_init, opt: Optimizer, dcfg: DPPFConfig,
     else:
         keys = jax.random.split(key, n_workers)
         params = jax.vmap(loss_params_init)(keys)
-    opt_state = jax.vmap(opt.init)(params)
-    cstate = consensus.init_state(dcfg.consensus, params)
+    if engine is None and getattr(dcfg, "engine", "tree") == "flat" \
+            and dcfg.consensus != "ddp":
+        engine = ConsensusEngine.from_stacked(
+            params, method=dcfg.consensus, eps=dcfg.eps)
+    if engine is not None:
+        params = engine.flatten(params)           # the ONE flatten per run
+        opt_state = jax.vmap(opt.init)(engine.workers(params))
+        cstate = consensus.init_state(dcfg.consensus, params, engine=engine)
+    else:
+        opt_state = jax.vmap(opt.init)(params)
+        cstate = consensus.init_state(dcfg.consensus, params)
     return TrainState(params=params, opt=opt_state, cstate=cstate,
-                      t=jnp.zeros((), jnp.int32))
+                      t=jnp.zeros((), jnp.int32), engine=engine)
 
 
 def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
@@ -62,21 +93,33 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
     """Build the fused DPPF round: scan(tau local steps) + consensus.
 
     Input batch pytree has leading dims (tau, M, ...). Returns
-    round_step(state, batch) -> (state, metrics). jit/shard at callsite.
+    round_step(state, batch) -> (state, metrics). jit/shard at callsite
+    (``donate_argnums=0`` recommended — required for in-place flat-view
+    reuse when the state carries a ConsensusEngine).
     """
     total_rounds = total_rounds or max(total_steps // max(dcfg.tau, 1), 1)
 
-    def local_step(p, o, b, t):
-        if sam_rho > 0:
-            (loss, _), g = sam_gradient(loss_fn, p, b, sam_rho)
-        else:
-            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b)
-        lr = cosine_lr(base_lr, t, total_steps, warmup)
-        gn = _grad_norm(g)
-        p, o = opt.step(p, g, o, lr)
-        return p, o, loss, gn
-
     def round_step(state: TrainState, batch):
+        engine = state.engine
+        if engine is None:
+            loss, p0 = loss_fn, state.params
+        else:
+            # local steps differentiate through the flat rows directly:
+            # unflatten_row is slices+reshapes, so grads arrive flat and the
+            # optimizer state stays (M, n) — no per-step re-flatten
+            loss = lambda row, b: loss_fn(engine.unflatten_row(row), b)
+            p0 = engine.workers(state.params)
+
+        def local_step(p, o, b, t):
+            if sam_rho > 0:
+                (loss_v, _), g = sam_gradient(loss, p, b, sam_rho)
+            else:
+                (loss_v, _), g = jax.value_and_grad(loss, has_aux=True)(p, b)
+            lr = cosine_lr(base_lr, t, total_steps, warmup)
+            gn = _grad_norm(g)
+            p, o = opt.step(p, g, o, lr)
+            return p, o, loss_v, gn
+
         def micro(carry, mb):
             params, opt_st, t = carry
             params, opt_st, losses, gns = jax.vmap(
@@ -84,18 +127,21 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             return (params, opt_st, t + 1), (losses, gns)
 
         (params, opt_st, t), (losses, gns) = jax.lax.scan(
-            micro, (state.params, state.opt, state.t), batch)
+            micro, (p0, state.opt, state.t), batch)
+        if engine is not None:
+            params = engine.with_workers(state.params, params)
 
         round_idx = t // max(dcfg.tau, 1)
         lam_t = lam_schedule(dcfg.lam_schedule, dcfg.lam, round_idx,
                              total_rounds)
         params, cstate, metrics = consensus.apply_round(
             params, dcfg, lam_t, state.cstate,
-            losses=losses[-1], grad_norms=gns[-1])
+            losses=losses[-1], grad_norms=gns[-1], engine=engine)
         metrics = dict(metrics)
         metrics["train_loss"] = losses.mean()
         metrics["lam_t"] = lam_t
-        new_state = TrainState(params=params, opt=opt_st, cstate=cstate, t=t)
+        new_state = TrainState(params=params, opt=opt_st, cstate=cstate, t=t,
+                               engine=engine)
         return new_state, metrics
 
     return round_step
@@ -127,8 +173,19 @@ def make_ddp_step(loss_fn, opt: Optimizer, *, base_lr: float,
     return step
 
 
+def stacked_params(state: TrainState):
+    """The worker-stacked parameter pytree, whichever engine holds it."""
+    if state.engine is not None:
+        return state.engine.unflatten(state.params)
+    return state.params
+
+
 def average_params(state: TrainState):
-    """Final returned model: the worker average (Alg. 1 last line)."""
+    """Final returned model: the worker average (Alg. 1 last line).
+    fp32 leaves on every engine (the tree path's tree_mean0 is fp32)."""
+    if state.engine is not None:
+        return state.engine.unflatten_row(
+            jnp.mean(state.engine.workers(state.params), axis=0), cast=False)
     if jax.tree.leaves(state.params)[0].ndim == 0:
         return state.params
     from repro.core import pullpush as pp

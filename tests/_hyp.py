@@ -1,0 +1,94 @@
+"""``hypothesis`` shim: use the real library when installed, otherwise run
+each ``@given`` test on a small deterministic sample drawn from the declared
+strategy bounds (endpoints + seeded interior points).
+
+The seed image ships without hypothesis, which used to make the whole suite
+fail at collection. Property tests lose exhaustiveness without the real
+library (install via requirements-dev.txt to get it back) but still execute
+and catch regressions.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on the seed image
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 5
+
+    class _Floats:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = float(lo), float(hi)
+
+        def sample(self, rng, i):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return rng.uniform(self.lo, self.hi)
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def sample(self, rng, i):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return rng.randint(self.lo, self.hi)
+
+    class _SampledFrom:
+        def __init__(self, elements):
+            self.elements = list(elements)
+
+        def sample(self, rng, i):
+            if i < len(self.elements):
+                return self.elements[i]
+            return rng.choice(self.elements)
+
+    class _St:
+        @staticmethod
+        def floats(min_value, max_value, **kw):
+            return _Floats(min_value, max_value)
+
+        @staticmethod
+        def integers(min_value, max_value, **kw):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
+
+    st = _St()
+
+    def settings(max_examples=None, **kw):
+        def deco(fn):
+            if max_examples is not None:
+                fn._hyp_max_examples = min(max_examples, _FALLBACK_EXAMPLES)
+            return fn
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper():
+                n = getattr(wrapper, "_hyp_max_examples", _FALLBACK_EXAMPLES)
+                rng = random.Random(0xD99F)
+                for i in range(n):
+                    kwargs = {k: s.sample(rng, i)
+                              for k, s in strategies.items()}
+                    try:
+                        fn(**kwargs)
+                    except AssertionError as e:
+                        raise AssertionError(
+                            f"falsifying example (fallback strategies): "
+                            f"{kwargs}") from e
+            # NOT functools.wraps: pytest would follow __wrapped__ to the
+            # original signature and demand fixtures for every parameter
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
