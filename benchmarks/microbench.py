@@ -20,7 +20,10 @@ from repro.core import consensus
 from repro.core import pullpush as pp
 from repro.core.engine import ConsensusEngine
 from repro.optim import make_optimizer
-from repro.train import init_train_state, make_round_step, make_ddp_step
+from repro.train import (
+    init_train_state, make_round_step, make_ddp_step,
+    make_sharded_round_step, shard_train_state,
+)
 from repro.train.trainer import TrainState
 
 
@@ -145,10 +148,60 @@ def bench_round_vs_ddp(*, smoke=False):
         derived=f"tau_steps={round(us_ddp * tau, 1)}")
 
 
+def bench_sharded_round(*, smoke=False):
+    """Sharded vs single-shard flat-engine round on the host devices.
+    Needs a multi-device CPU mesh (run with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``); emits a
+    skipped row on one device so the CSV schema is stable."""
+    ndev = len(jax.devices())
+    if ndev < 2:
+        csv("microbench", op="sharded_round", skipped=1,
+            note="single device; set "
+                 "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return
+    from repro.launch.mesh import make_flat_engine_mesh
+    data = default_data()
+    opt = make_optimizer("sgd")
+    M, bs, tau = 8, 16 if smoke else 64, 4
+    n_it = 3 if smoke else 20
+    mesh, plan = make_flat_engine_mesh(M)
+    batch = {"x": jnp.zeros((tau, M, bs, data["dim"])),
+             "y": jnp.zeros((tau, M, bs), jnp.int32)}
+    init = lambda k: mlp_init(k, data["dim"], data["n_classes"],
+                              width=32 if smoke else 256)
+    rows = {}
+    for overlap in ("none", "staleness1"):
+        dcfg = DPPFConfig(alpha=0.1, lam=0.5, tau=tau, engine="flat",
+                          overlap=overlap)
+        st = init_train_state(init, opt, dcfg, M, jax.random.PRNGKey(0))
+        single = jax.jit(make_round_step(mlp_loss, opt, dcfg, base_lr=0.05,
+                                         total_steps=100), donate_argnums=0)
+        us_single = _time_donated(lambda s: single(s, batch)[0], st, n=n_it)
+        st = shard_train_state(
+            init_train_state(init, opt, dcfg, M, jax.random.PRNGKey(0)),
+            mesh, plan)
+        sharded = jax.jit(make_sharded_round_step(
+            mlp_loss, opt, dcfg, mesh=mesh, plan=plan, base_lr=0.05,
+            total_steps=100), donate_argnums=0)
+        us_sharded = _time_donated(lambda s: sharded(s, batch)[0], st,
+                                   n=n_it)
+        rows[overlap] = (us_single, us_sharded)
+        csv("microbench", op=f"sharded_round_overlap_{overlap}",
+            us_single_device=round(us_single, 1),
+            us_sharded=round(us_sharded, 1),
+            mesh="x".join(str(s) for s in mesh.devices.shape))
+    us_exact, us_stale = rows["none"][1], rows["staleness1"][1]
+    csv("microbench", op="sharded_round",
+        overlap_speedup=round(us_exact / us_stale, 2),
+        note="shard_map round (collective Gram); staleness-1 hides the "
+             "consensus behind the tau local steps")
+
+
 def run(*, smoke=False):
     bench_engine_vs_tree(smoke=smoke)
     bench_pullpush(smoke=smoke)
     bench_round_vs_ddp(smoke=smoke)
+    bench_sharded_round(smoke=smoke)
 
 
 if __name__ == "__main__":

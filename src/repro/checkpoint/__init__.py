@@ -1,3 +1,6 @@
-from repro.checkpoint.io import load_pytree, save_pytree
+from repro.checkpoint.io import (
+    load_pytree, load_train_state, save_pytree, save_train_state,
+)
 
-__all__ = ["load_pytree", "save_pytree"]
+__all__ = ["load_pytree", "load_train_state", "save_pytree",
+           "save_train_state"]

@@ -4,9 +4,15 @@ Sharding-aware: arrays are gathered to host (``jax.device_get``) on save;
 on restore the caller re-applies shardings (``jax.device_put`` with the
 plan's sharding), so checkpoints are mesh-shape independent — a checkpoint
 written on the 16x16 mesh restores onto the 2x16x16 multi-pod mesh.
+
+``save_train_state``/``load_train_state`` round-trip a full flat-engine
+``TrainState`` — the (R, n) view, optimizer state, consensus state, the
+staleness-1 snapshot, and the step counter — for mid-run resume
+(``launch/train.py --ckpt``).
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 
 import jax
@@ -48,3 +54,56 @@ def load_pytree(path, like):
     extra = {k.split(_SEP, 1)[1]: data[k] for k in data.files
              if k.startswith("__extra__")}
     return jax.tree_util.tree_unflatten(treedef, out), extra
+
+
+def _state_tree(state):
+    tree = {"params": state.params, "opt": state.opt, "cstate": state.cstate}
+    if state.snap is not None:
+        tree["snap"] = state.snap
+    return tree
+
+
+def save_train_state(path, state):
+    """Full ``TrainState`` -> npz: the flat (R, n) view (or stacked tree),
+    optimizer + consensus state, staleness-1 snapshot, and step counter.
+    The engine is static metadata and is NOT saved — the resume path
+    rebuilds it from the same config (`train.init_train_state`)."""
+    save_pytree(path, _state_tree(state),
+                extra={"t": np.asarray(jax.device_get(state.t))})
+
+
+def load_train_state(path, like, *, shardings=None):
+    """Restore a ``save_train_state`` checkpoint into the structure of
+    ``like`` (a freshly initialized ``TrainState`` from the same config —
+    its engine metadata is kept). ``shardings``, when given, is a pytree of
+    ``NamedSharding`` matching ``{"params", "opt", "cstate", "snap"}``
+    subtrees and is re-applied on the restored arrays (the module's
+    mesh-independence contract). A checkpoint saved without a staleness-1
+    snapshot (an exact-mode run) resumes into an overlap run with the
+    RESTORED params as warm-start snapshot — the steady-state carry, not
+    the init fleet, whose stale delta would jolt late-training params (the
+    round-0 bubble only gates t == 0). Returns the resumed ``TrainState``.
+    """
+    file = path if path.endswith(".npz") else path + ".npz"
+    with np.load(file) as data:
+        keys = set(data.files)
+    if f"__extra__{_SEP}t" not in keys:
+        raise ValueError(
+            f"{path} is not a train-state checkpoint (no step counter) — "
+            "final-params checkpoints (save_pytree) are a different format")
+    template = _state_tree(like)
+    missing_snap = "snap" in template and not any(
+        k.startswith(f"snap{_SEP}") for k in keys)
+    if missing_snap:
+        del template["snap"]
+    tree, extra = load_pytree(path, template)
+    if missing_snap:
+        tree["snap"] = dict(like.snap, x=tree["params"] + 0.0)
+    if shardings is not None:
+        for k, sh in shardings.items():
+            if k in tree:
+                tree[k] = jax.device_put(tree[k], sh)
+    return dataclasses.replace(
+        like, params=tree["params"], opt=tree["opt"], cstate=tree["cstate"],
+        snap=tree.get("snap", like.snap),
+        t=jax.numpy.asarray(extra["t"], jax.numpy.int32))

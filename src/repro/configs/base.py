@@ -254,13 +254,28 @@ class DPPFConfig:
     qsr_beta: float = 0.0       # >0 => QSR tau schedule on top (baseline)
     eps: float = 1e-12          # norm guard
     # consensus execution engine: "tree" walks the stacked pytree (reference
-    # path), "flat" runs every method on the persistent (M, n) flat view via
-    # repro.core.engine.ConsensusEngine (DESIGN.md §Consensus-engine)
+    # path), "flat" runs every method on the persistent (R, n) flat view
+    # (workers + aux state rows) via repro.core.engine.ConsensusEngine
+    # (DESIGN.md §Consensus-engine)
     engine: str = "tree"
+    # round-boundary overlap: "none" applies the consensus computed from
+    # THIS round's post-local-step params (exact, the paper's Alg. 1);
+    # "staleness1" applies the consensus computed from the PREVIOUS round's
+    # snapshot, so the round's all-reduce hides behind the tau local steps.
+    # Flat engine only (DESIGN.md §Sharded-execution).
+    overlap: str = "none"
 
     def __post_init__(self):
         assert self.engine in ("tree", "flat"), (
             f"unknown consensus engine {self.engine!r}")
+        # ValueError, not assert: must survive python -O (a silently
+        # dropped overlap check would train without the promised overlap)
+        if self.overlap not in ("none", "staleness1"):
+            raise ValueError(f"unknown overlap mode {self.overlap!r}")
+        if self.overlap == "staleness1" and self.engine != "flat":
+            raise ValueError(
+                "overlap='staleness1' requires engine='flat' (the stale "
+                "consensus snapshot lives in the flat view)")
 
     @property
     def valley_width(self) -> float:

@@ -22,6 +22,16 @@ production hot path (DESIGN.md §Consensus-engine). Both paths emit the SAME
 metrics pytree from every branch (stable under ``lax.scan``/loggers):
 ``consensus_dist``, ``pre_dist``, ``pull_force``, ``push_force``.
 
+The flat lowering also runs under a mapped axis (``jax.shard_map``): with
+``engine.shard`` set, ``params`` is the full-R-row LOCAL column shard
+``(R, n_local)`` and the stages' column contractions psum over the shard's
+column axes inside the engine. The lowering itself is shard-oblivious —
+target weights, coefficients, and the (R, R) mixing are replicated math —
+but ``losses``/``grad_norms`` must then be the GLOBAL (M,) vectors
+(all-gathered over the worker axes by the sharded trainer), since lsgd's
+argmin and mgrawa's weights are fleet-wide reductions
+(DESIGN.md §Sharded-execution).
+
 Remark 1 (paper): DPPF_lsgd with push away from x_A does NOT converge; the
 documented fix pushes away from the leader instead (push_from="leader").
 """

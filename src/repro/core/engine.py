@@ -47,15 +47,43 @@ This engine keeps ONE persistent flat view for the whole training run:
 Method semantics (incl. push-from-recomputed-center ordering) mirror
 ``repro.core.consensus.apply_round``'s tree path, which remains the parity
 oracle. See DESIGN.md §Consensus-engine.
+
+Sharded execution: under ``jax.shard_map`` the same stages run on a
+``(R, n_local)`` column shard — set ``engine.shard`` (a ``ShardedLayout``)
+and every column contraction (Gram, gap Gram, distances) completes with a
+``psum`` over ``shard.col_axes``, while the tiny (R, R) coefficient math
+and the mixing GEMM stay shard-local. `train.trainer.
+make_sharded_round_step` owns the row all-gather at the round boundary;
+DESIGN.md §Sharded-execution has the layout and collective placement.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ShardedLayout:
+    """Mesh partitioning of the flat view under ``jax.shard_map``.
+
+    Inside a mapped round every engine method receives the full-R rows of
+    the LOCAL column shard, shape ``(R, n_local)``; worker rows are
+    all-gathered over ``row_axes`` at the round boundary by the trainer
+    (`make_sharded_round_step`), never inside the engine. Any contraction
+    over the column (parameter) dimension — the Gram, gap Grams, distances
+    to the mean — is completed with a ``psum`` over ``col_axes``; the
+    mixing GEMM is column-local and needs no collective. Hashable, so a
+    sharded engine stays valid jit-static metadata (DESIGN.md
+    §Sharded-execution).
+    """
+    row_axes: Tuple[str, ...] = ()
+    col_axes: Tuple[str, ...] = ()
+    rows: int = 1     # number of row (worker-axis) shards
+    cols: int = 1     # number of column shards
 
 
 @dataclass(frozen=True)
@@ -95,6 +123,10 @@ class ConsensusEngine:
     precise: bool = False         # jnp path: exact gap-space stages
     block_cols: int = 2048
     eps: float = 1e-12
+    # set (dataclasses.replace) inside a shard_map'd round: inputs are then
+    # (R, n_local) column shards and column contractions psum over
+    # shard.col_axes. None = single-shard (whole (R, n) view) execution.
+    shard: Optional[ShardedLayout] = None
 
     # -- construction -------------------------------------------------------
 
@@ -173,12 +205,22 @@ class ConsensusEngine:
         L = self.layout
         return jnp.zeros((L.R,), jnp.float32).at[:L.M].set(1.0 / L.M)
 
+    def _colsum(self, partial):
+        """Complete a column-dimension contraction. Single-shard: identity.
+        Sharded: psum of the per-shard partial over the column axes — the
+        (R, R)-sized reduction is the only collective the engine itself
+        ever issues."""
+        if self.shard is not None and self.shard.col_axes:
+            return jax.lax.psum(partial, self.shard.col_axes)
+        return partial
+
     def gram(self, flat):
         """(R, R) uncentered Gram. Only zero-sum quadratic forms of it are
         meaningful; their fp32 noise floor is ~eps32 * max diag (see
-        GRAM_NOISE_FACTOR and the module docstring)."""
+        GRAM_NOISE_FACTOR and the module docstring). Sharded: per-shard
+        partial Gram psum'd over the column axes."""
         f = flat.astype(jnp.float32)
-        return f @ f.T
+        return self._colsum(f @ f.T)
 
     @staticmethod
     def sq_forms(G, V):
@@ -213,7 +255,7 @@ class ConsensusEngine:
         # degenerate gap is a true zero, matching the tree path's d = x - a
         tx = T @ flat
         g = tx - flat
-        Gg = g @ g.T
+        Gg = self._colsum(g @ g.T)
         r = jnp.sqrt(jnp.maximum(jnp.diagonal(Gg), 0.0))
         coef = c0 + c1 / jnp.maximum(r, self.eps)
         new = tx + (1.0 - coef)[:, None] * (flat - tx)
@@ -247,9 +289,16 @@ class ConsensusEngine:
 
         if self.use_kernel:
             from repro.kernels.pullpush import pullpush as pk
-            new, r, G = pk.fused_round(flat, T, c0, c1, eps=self.eps,
-                                       block_cols=self.block_cols,
-                                       interpret=self.interpret)
+            if self.shard is not None and self.shard.col_axes:
+                # column shard: partial-Gram kernel + host-side psum
+                # epilogue + mixing kernel (pullpush.fused_round_sharded)
+                new, r, G = pk.fused_round_sharded(
+                    flat, T, c0, c1, axis=self.shard.col_axes, eps=self.eps,
+                    block_cols=self.block_cols, interpret=self.interpret)
+            else:
+                new, r, G = pk.fused_round(flat, T, c0, c1, eps=self.eps,
+                                           block_cols=self.block_cols,
+                                           interpret=self.interpret)
             coef = c0 + c1 / jnp.maximum(r, self.eps)
             W = eye + coef[:, None] * (T - eye)
             pre = jnp.mean(jnp.sqrt(self.sq_forms(G, Vu)[:M]))
@@ -282,7 +331,7 @@ class ConsensusEngine:
         if self.layout.aux:
             T = jnp.concatenate([T[:M], eye[M:]], axis=0)
         g = T @ flat - flat                       # worker rows: mean - x_m
-        Gg = g @ g.T
+        Gg = self._colsum(g @ g.T)
         r = jnp.sqrt(jnp.maximum(jnp.diagonal(Gg), 0.0))
         inv = 1.0 / jnp.maximum(r, self.eps)
         units = -g[:M] * inv[:M, None]            # (x_m - mean)/r_m
@@ -304,4 +353,5 @@ class ConsensusEngine:
         R, M = self.layout.R, self.layout.M
         u = self.uniform
         g = jnp.broadcast_to(u, (R, R)) @ flat - flat
-        return jnp.sqrt(jnp.maximum(jnp.diagonal(g @ g.T), 0.0))[:M]
+        d2 = self._colsum(jnp.diagonal(g @ g.T))
+        return jnp.sqrt(jnp.maximum(d2, 0.0))[:M]

@@ -211,12 +211,8 @@ def fused_round(flat, T, c0, c1, *, eps=1e-12, block_cols=2048,
     Rp = _round_up(max(R, SUBLANE), SUBLANE)
     bc = min(block_cols, _round_up(n, LANE))
     nb = _round_up(n, bc) // bc
-    xp = jnp.pad(flat.astype(jnp.float32),
-                 ((0, Rp - R), (0, nb * bc - n)))
     # pad rows: identity target + zero coefs => rows (and G forms) inert
-    tp = jnp.zeros((Rp, Rp), jnp.float32).at[:R, :R].set(
-        T.astype(jnp.float32))
-    tp = tp + jnp.diag((jnp.arange(Rp) >= R).astype(jnp.float32))
+    xp, tp = _pad_flat(flat, Rp, bc, nb), _pad_target(T, Rp)
     c0p = jnp.zeros((Rp, 1), jnp.float32).at[:R, 0].set(
         jnp.broadcast_to(jnp.asarray(c0, jnp.float32), (R,)))
     c1p = jnp.zeros((Rp, 1), jnp.float32).at[:R, 0].set(
@@ -248,3 +244,124 @@ def fused_round(flat, T, c0, c1, *, eps=1e-12, block_cols=2048,
         interpret=interpret,
     )(xp, tp, c0p, c1p)
     return out[:R, :n], r[:R, 0], G[:R, :R]
+
+
+# ---------------------------------------------------------------------------
+# Sharded variant: split phases with a host-side psum epilogue
+# ---------------------------------------------------------------------------
+#
+# Under shard_map each device holds a COLUMN shard (R, n_local) of the flat
+# view, so the two phases of ``fused_round`` cannot live in one pallas_call:
+# the Gram must be completed across shards before any coefficient exists.
+# ``partial_gram`` and ``mix_shard`` are the two phases as standalone
+# kernels; ``fused_round_sharded`` chains them around a trace-level
+# ``lax.psum`` (the "host-side" epilogue — it lowers to the mesh collective,
+# not to kernel code). Block-centering still applies per column block, and
+# partial Grams ADD across shards: each block's centering shift is a rank-2
+# perturbation that cancels in every zero-sum quadratic form, which is the
+# only way the Gram is ever read.
+
+
+def _partial_gram_kernel(x_ref, g_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    x = x_ref[...]
+    e = x - x[0:1, :]                      # block-centered (see fused_round)
+    g_ref[...] += jnp.dot(e, e.T, preferred_element_type=jnp.float32)
+
+
+def _mix_kernel(c_ref, x_ref, t_ref, o_ref):
+    x = x_ref[...]
+    tx = jnp.dot(t_ref[...], x, preferred_element_type=jnp.float32)
+    o_ref[...] = tx + (1.0 - c_ref[...]) * (x - tx)
+
+
+def _pad_flat(flat, Rp, bc, nb):
+    """(R, n) -> zero-padded (Rp, nb*bc) fp32 — the one copy of the flat
+    matrix padding, shared by ``fused_round`` and both phase kernels."""
+    R, n = flat.shape
+    return jnp.pad(flat.astype(jnp.float32), ((0, Rp - R), (0, nb * bc - n)))
+
+
+def _pad_target(T, Rp):
+    """(R, R) -> (Rp, Rp) with IDENTITY pad rows, so padding stays inert in
+    both the Gram forms and the mixing (shared by the same callers)."""
+    R = T.shape[0]
+    tp = jnp.zeros((Rp, Rp), jnp.float32).at[:R, :R].set(
+        T.astype(jnp.float32))
+    return tp + jnp.diag((jnp.arange(Rp) >= R).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols", "interpret"))
+def partial_gram(flat, *, block_cols=2048, interpret=True):
+    """Block-centered Gram of a (R, n_local) column shard — phase 0 of
+    ``fused_round`` as its own kernel. Zero-sum quadratic forms of the
+    summed per-shard outputs equal those of the full-width Gram."""
+    R, n = flat.shape
+    Rp = _round_up(max(R, SUBLANE), SUBLANE)
+    bc = min(block_cols, _round_up(n, LANE))
+    nb = _round_up(n, bc) // bc
+    xp = _pad_flat(flat, Rp, bc, nb)
+    G = pl.pallas_call(
+        _partial_gram_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((Rp, bc), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((Rp, Rp), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Rp, Rp), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return G[:R, :R]
+
+
+@functools.partial(jax.jit, static_argnames=("block_cols", "interpret"))
+def mix_shard(flat, T, coef, *, block_cols=2048, interpret=True):
+    """Apply ``out_i = x_i + coef_i (T_i x - x_i)`` to a (R, n_local)
+    column shard with PRECOMPUTED coefficients — phase 1 of ``fused_round``
+    (same uniform gap form, exact at c = 1 and for huge |c|)."""
+    R, n = flat.shape
+    Rp = _round_up(max(R, SUBLANE), SUBLANE)
+    bc = min(block_cols, _round_up(n, LANE))
+    nb = _round_up(n, bc) // bc
+    xp, tp = _pad_flat(flat, Rp, bc, nb), _pad_target(T, Rp)
+    cp = jnp.zeros((Rp, 1), jnp.float32).at[:R, 0].set(
+        jnp.broadcast_to(jnp.asarray(coef, jnp.float32), (R,)))
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((Rp, 1), lambda j: (0, 0)),
+            pl.BlockSpec((Rp, bc), lambda j: (0, j)),
+            pl.BlockSpec((Rp, Rp), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((Rp, bc), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((Rp, nb * bc), jnp.float32),
+        interpret=interpret,
+    )(cp, xp, tp)
+    return out[:R, :n]
+
+
+def fused_round_sharded(flat, T, c0, c1, *, axis, eps=1e-12,
+                        block_cols=2048, interpret=True):
+    """``fused_round`` for a column shard under shard_map.
+
+    ``flat`` is the local (R, n_local) shard; ``axis`` names the mesh
+    axis/axes the columns are sharded over. Runs the partial-Gram kernel,
+    completes the Gram with ``lax.psum(G, axis)`` (the round's only
+    engine-level collective — (R, R) bytes), derives r/coef at trace level,
+    and applies the mixing kernel shard-locally. Returns ``(out, r, G)``
+    with the same meaning as ``fused_round`` (G is the global
+    block-centered Gram: zero-sum forms only). Must be called inside a
+    ``shard_map`` that binds ``axis``.
+    """
+    R = flat.shape[0]
+    G = partial_gram(flat, block_cols=block_cols, interpret=interpret)
+    G = jax.lax.psum(G, axis)
+    V = jnp.eye(R, dtype=jnp.float32) - T.astype(jnp.float32)
+    r = jnp.sqrt(jnp.maximum(jnp.sum((V @ G) * V, axis=1), 0.0))
+    coef = (jnp.broadcast_to(jnp.asarray(c0, jnp.float32), (R,))
+            + jnp.asarray(c1, jnp.float32) / jnp.maximum(r, eps))
+    out = mix_shard(flat, T, coef, block_cols=block_cols,
+                    interpret=interpret)
+    return out, r, G

@@ -10,6 +10,8 @@ state (required so smoke tests see 1 device while the dry-run sees 512).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -31,7 +33,11 @@ def make_hierarchical_mesh(workers: int, fsdp: int, model: int,
     big models FSDP-shard within each DPPF worker (DESIGN.md memory note).
     Single-pod must satisfy workers*fsdp*model == 256 (512 multi-pod)."""
     n = 512 if multi_pod else 256
-    assert workers * fsdp * model == n, (workers, fsdp, model, n)
+    if workers * fsdp * model != n:
+        raise ValueError(
+            f"hierarchical mesh shape {workers}x{fsdp}x{model} = "
+            f"{workers * fsdp * model} chips must use exactly {n} "
+            f"({'multi-pod' if multi_pod else 'single-pod'})")
     devs = np.asarray(jax.devices()[:n]).reshape(workers, fsdp, model)
     return Mesh(devs, ("data", "fsdp", "model"))
 
@@ -40,6 +46,19 @@ def make_cpu_mesh():
     """1-device mesh for tests/benches (same code path, trivial shardings)."""
     devs = np.asarray(jax.devices()[:1]).reshape(1, 1)
     return Mesh(devs, ("data", "model"))
+
+
+def make_flat_engine_mesh(workers: int):
+    """All local devices as a (data, model) mesh for the sharded flat
+    engine: worker rows over the largest device count dividing ``workers``,
+    the remainder as column (fsdp-style) shards of the (R, n) view.
+    Returns ``(mesh, plan)`` ready for ``make_sharded_round_step``."""
+    devs = jax.devices()
+    rows = math.gcd(workers, len(devs))
+    cols = len(devs) // rows
+    mesh = Mesh(np.asarray(devs[:rows * cols]).reshape(rows, cols),
+                ("data", "model"))
+    return mesh, MeshPlan(worker_axes=("data",), model_axes=("model",))
 
 
 # ---------------------------------------------------------------------------
@@ -124,6 +143,31 @@ def param_shardings(mesh: Mesh, params, plan: MeshPlan, *, stacked=True):
         return NamedSharding(mesh, _leaf_spec(mesh, path, np.shape(leaf),
                                               plan, stacked))
     return jax.tree_util.tree_map_with_path(one, params)
+
+
+def flat_col_entry(mesh: Mesh, n: int, plan: MeshPlan):
+    """PartitionSpec entry for the flat view's column dim: the fsdp+model
+    axis group when it divides n, else None (replicate fallback). The ONE
+    copy of the column-divisibility rule — shared by `flat_view_sharding`,
+    `train.trainer.make_sharded_round_step`'s in_specs, and the staleness-1
+    snapshot placement."""
+    col_axes = plan.fsdp_axes + plan.model_axes
+    if col_axes and n % _axes_size(mesh, col_axes) == 0:
+        return _axes_entry(col_axes)
+    return None
+
+
+def flat_view_sharding(mesh: Mesh, shape, plan: MeshPlan):
+    """Sharding rule for the flat engine's persistent (R, n) view: rows
+    over the worker axes, columns over fsdp+model axes — each only when
+    divisible. Aux rows (easgd center) usually break row divisibility, in
+    which case rows replicate here and `make_sharded_round_step` still
+    row-shards the worker block via its shard_map in_specs."""
+    R, n = shape
+    spec = [None, flat_col_entry(mesh, n, plan)]
+    if plan.worker_axes and R % _axes_size(mesh, plan.worker_axes) == 0:
+        spec[0] = _axes_entry(plan.worker_axes)
+    return NamedSharding(mesh, P(*spec))
 
 
 def batch_shardings(mesh: Mesh, batch, plan: MeshPlan, *, round_dims=True):

@@ -9,17 +9,21 @@ same script runs under the production mesh with the dry-run's shardings.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import save_pytree
+from repro.checkpoint import load_train_state, save_pytree, save_train_state
 from repro.configs import ARCHS, DPPFConfig, get_arch, reduced
 from repro.data import TokenTask, make_lm_batch, make_round_batch
 from repro.models import build_model
 from repro.optim import make_optimizer
-from repro.train import init_train_state, make_ddp_step, make_round_step
+from repro.train import (
+    init_train_state, make_ddp_step, make_round_step,
+    make_sharded_round_step, shard_train_state,
+)
 from repro.train.trainer import TrainState, average_params
 
 
@@ -39,7 +43,18 @@ def main(argv=None):
     ap.add_argument("--consensus", default="simple_avg")
     ap.add_argument("--engine", default="flat", choices=["tree", "flat"],
                     help="consensus execution engine (flat = persistent "
-                         "(M, n) view + fused Gram/mixing round update)")
+                         "(R, n) view — worker rows plus aux consensus-"
+                         "state rows — with fused Gram/mixing round update)")
+    ap.add_argument("--overlap", default="none",
+                    choices=["none", "staleness1"],
+                    help="staleness1 = apply the consensus computed from "
+                         "the previous round's snapshot, hiding the "
+                         "all-reduce behind the tau local steps (flat "
+                         "engine only)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run the round under shard_map on all local "
+                         "devices (launch.mesh.make_flat_engine_mesh; "
+                         "flat engine only)")
     ap.add_argument("--lam-schedule", default="increasing")
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
     ap.add_argument("--sam-rho", type=float, default=0.0)
@@ -48,9 +63,18 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8, help="per-worker batch")
     ap.add_argument("--lr", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt", default="",
+                    help="checkpoint path: final (serving) params are "
+                         "written here as before; DPPF runs additionally "
+                         "keep a mid-run resume point at "
+                         "<ckpt>.state.npz and resume from it when it "
+                         "exists")
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args(argv)
+    if args.sharded and (args.engine != "flat" or args.consensus == "ddp"):
+        ap.error("--sharded requires --engine flat and a non-ddp consensus "
+                 "(the shard_map round runs on the flat engine's (R, n) "
+                 "view)")
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -71,7 +95,7 @@ def main(argv=None):
     task = TokenTask(vocab_size=cfg.vocab_size, seq_len=args.seq)
     dcfg = DPPFConfig(alpha=args.alpha, lam=args.lam, tau=args.tau,
                       consensus=args.consensus, engine=args.engine,
-                      lam_schedule=args.lam_schedule)
+                      overlap=args.overlap, lam_schedule=args.lam_schedule)
     opt = make_optimizer(args.optimizer, momentum=0.9, weight_decay=1e-3)
     key = jax.random.PRNGKey(args.seed)
 
@@ -94,15 +118,34 @@ def main(argv=None):
         final = state.params
     else:
         state = init_train_state(model.init, opt, dcfg, args.workers, key)
-        # donation keeps the flat engine's (R, n) view (and the opt state)
-        # in place across rounds — no per-round copies of the parameters
-        step = jax.jit(make_round_step(model.loss, opt, dcfg,
-                                       base_lr=args.lr,
-                                       total_steps=args.steps,
-                                       sam_rho=args.sam_rho),
-                       donate_argnums=0)
+        # the resume point lives NEXT TO the final-params checkpoint (which
+        # keeps its serving format at args.ckpt, see launch/serve.py)
+        state_file = ""
+        if args.ckpt:
+            stem = args.ckpt[:-4] if args.ckpt.endswith(".npz") else args.ckpt
+            state_file = stem + ".state.npz"
+        if state_file and os.path.exists(state_file):
+            state = load_train_state(state_file, state)
+            print(f"resumed from {state_file} at step {int(state.t)}")
+        if args.sharded:
+            from repro.launch.mesh import make_flat_engine_mesh
+            mesh, plan = make_flat_engine_mesh(args.workers)
+            print(f"sharded round on mesh {dict(mesh.shape)}")
+            state = shard_train_state(state, mesh, plan)
+            step = jax.jit(make_sharded_round_step(
+                model.loss, opt, dcfg, mesh=mesh, plan=plan, base_lr=args.lr,
+                total_steps=args.steps, sam_rho=args.sam_rho),
+                donate_argnums=0)
+        else:
+            # donation keeps the flat engine's (R, n) view (and the opt
+            # state) in place across rounds — no per-round parameter copies
+            step = jax.jit(make_round_step(model.loss, opt, dcfg,
+                                           base_lr=args.lr,
+                                           total_steps=args.steps,
+                                           sam_rho=args.sam_rho),
+                           donate_argnums=0)
         rounds = max(args.steps // args.tau, 1)
-        for r in range(rounds):
+        for r in range(int(state.t) // args.tau, rounds):
             batch = make_round_batch(task, args.seed, args.workers, args.tau,
                                      r, args.batch, cfg)
             state, m = step(state, batch)
@@ -111,6 +154,9 @@ def main(argv=None):
                       f"loss {float(m['train_loss']):.4f} "
                       f"consensus_dist {float(m['consensus_dist']):.3f} "
                       f"lam_t {float(m.get('lam_t', 0)):.3f}")
+        if state_file:
+            save_train_state(state_file, state)
+            print(f"train-state resume point -> {state_file}")
         final = average_params(state)
 
     # held-out eval

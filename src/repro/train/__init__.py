@@ -1,7 +1,9 @@
 from repro.train.trainer import (
     TrainState, average_params, init_train_state, make_ddp_step,
-    make_round_step, stacked_params,
+    make_round_step, make_sharded_round_step, shard_train_state,
+    stacked_params,
 )
 
 __all__ = ["TrainState", "average_params", "init_train_state",
-           "make_ddp_step", "make_round_step", "stacked_params"]
+           "make_ddp_step", "make_round_step", "make_sharded_round_step",
+           "shard_train_state", "stacked_params"]

@@ -15,9 +15,23 @@ slice/reshape views of it (``engine.unflatten_row``), and the consensus
 update runs as flat Gram+mixing passes — no per-round flatten/concatenate.
 Donate the state (``jax.jit(round_step, donate_argnums=0)``) so the buffer
 is reused in place across rounds (DESIGN.md §Consensus-engine).
+
+Two round-level extensions on top of the flat engine:
+
+* ``make_sharded_round_step`` lowers the WHOLE round under
+  ``jax.shard_map``: worker rows of the (R, n) view shard over the plan's
+  worker axes, columns over its fsdp/model axes; the round's collectives
+  are one worker-row all-gather at the round boundary plus the engine's
+  (R, R) partial-Gram psum (DESIGN.md §Sharded-execution).
+* ``DPPFConfig.overlap == "staleness1"`` applies the consensus computed
+  from the PREVIOUS round's snapshot (carried in ``TrainState.snap``), so
+  the consensus collectives have no data dependence on the current round's
+  local steps and the scheduler hides them behind tau steps of compute.
 """
 from __future__ import annotations
 
+import dataclasses
+import math
 from dataclasses import dataclass
 from typing import Any, Optional
 
@@ -26,7 +40,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import DPPFConfig
 from repro.core import consensus
-from repro.core.engine import ConsensusEngine
+from repro.core.engine import ConsensusEngine, ShardedLayout
 from repro.core.schedules import cosine_lr, lam_schedule
 from repro.optim import Optimizer, sam_gradient
 
@@ -38,19 +52,48 @@ class TrainState:
     opt: Any
     cstate: Any          # consensus state (EASGD center etc.)
     t: jnp.ndarray       # local-step counter (scalar int32)
+    snap: Any = None     # staleness-1 carry: {"x": (R, n) snapshot,
+                         # "losses": (M,), "gns": (M,)} (flat engine only)
     engine: Any = None   # ConsensusEngine (static metadata) or None
 
 
 # ``engine`` is hashable static metadata: jit recompiles if the layout
 # changes, and donation/vmap only ever see the array fields.
 jax.tree_util.register_dataclass(
-    TrainState, data_fields=("params", "opt", "cstate", "t"),
+    TrainState, data_fields=("params", "opt", "cstate", "t", "snap"),
     meta_fields=("engine",))
 
 
 def _grad_norm(grads):
     return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                         for g in jax.tree.leaves(grads)))
+
+
+def _scan_local_steps(loss, opt: Optimizer, p0, opt_st, t0, batch, *,
+                      base_lr, total_steps, warmup, sam_rho):
+    """The tau purely-local steps shared by every round builder:
+    ``lax.scan`` over the batch's leading (tau) dim, vmap over the worker
+    dim of ``p0``/``opt_st``/``batch[:, m]``. Returns
+    ``(params, opt_st, t, losses, gns)`` with losses/gns shaped (tau, M)."""
+    def local_step(p, o, b, t):
+        if sam_rho > 0:
+            (loss_v, _), g = sam_gradient(loss, p, b, sam_rho)
+        else:
+            (loss_v, _), g = jax.value_and_grad(loss, has_aux=True)(p, b)
+        lr = cosine_lr(base_lr, t, total_steps, warmup)
+        gn = _grad_norm(g)
+        p, o = opt.step(p, g, o, lr)
+        return p, o, loss_v, gn
+
+    def micro(carry, mb):
+        params, opt_state, t = carry
+        params, opt_state, losses, gns = jax.vmap(
+            local_step, in_axes=(0, 0, 0, None))(params, opt_state, mb, t)
+        return (params, opt_state, t + 1), (losses, gns)
+
+    (params, opt_st, t), (losses, gns) = jax.lax.scan(
+        micro, (p0, opt_st, t0), batch)
+    return params, opt_st, t, losses, gns
 
 
 def init_train_state(loss_params_init, opt: Optimizer, dcfg: DPPFConfig,
@@ -76,15 +119,29 @@ def init_train_state(loss_params_init, opt: Optimizer, dcfg: DPPFConfig,
             and dcfg.consensus != "ddp":
         engine = ConsensusEngine.from_stacked(
             params, method=dcfg.consensus, eps=dcfg.eps)
+    snap = None
     if engine is not None:
         params = engine.flatten(params)           # the ONE flatten per run
         opt_state = jax.vmap(opt.init)(engine.workers(params))
         cstate = consensus.init_state(dcfg.consensus, params, engine=engine)
+        if getattr(dcfg, "overlap", "none") == "staleness1":
+            # round-0 snapshot: the (degenerate) init fleet. The round
+            # builders gate the first delta off (explicit pipeline bubble),
+            # so round 0 is local steps only and the pipeline fills in one
+            # round. The + 0.0 copy keeps snap and params
+            # donation-distinct.
+            snap = {"x": params + 0.0,
+                    "losses": jnp.zeros((n_workers,), jnp.float32),
+                    "gns": jnp.ones((n_workers,), jnp.float32)}
     else:
+        if getattr(dcfg, "overlap", "none") == "staleness1":
+            raise ValueError(
+                "overlap='staleness1' requires engine='flat' (the stale "
+                "snapshot is an extra (R, n) flat buffer)")
         opt_state = jax.vmap(opt.init)(params)
         cstate = consensus.init_state(dcfg.consensus, params)
     return TrainState(params=params, opt=opt_state, cstate=cstate,
-                      t=jnp.zeros((), jnp.int32), engine=engine)
+                      t=jnp.zeros((), jnp.int32), snap=snap, engine=engine)
 
 
 def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
@@ -98,9 +155,12 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
     reuse when the state carries a ConsensusEngine).
     """
     total_rounds = total_rounds or max(total_steps // max(dcfg.tau, 1), 1)
+    overlap = getattr(dcfg, "overlap", "none") == "staleness1"
 
     def round_step(state: TrainState, batch):
         engine = state.engine
+        if overlap and engine is None:
+            raise ValueError("overlap='staleness1' requires the flat engine")
         if engine is None:
             loss, p0 = loss_fn, state.params
         else:
@@ -110,41 +170,257 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             loss = lambda row, b: loss_fn(engine.unflatten_row(row), b)
             p0 = engine.workers(state.params)
 
-        def local_step(p, o, b, t):
-            if sam_rho > 0:
-                (loss_v, _), g = sam_gradient(loss, p, b, sam_rho)
-            else:
-                (loss_v, _), g = jax.value_and_grad(loss, has_aux=True)(p, b)
-            lr = cosine_lr(base_lr, t, total_steps, warmup)
-            gn = _grad_norm(g)
-            p, o = opt.step(p, g, o, lr)
-            return p, o, loss_v, gn
-
-        def micro(carry, mb):
-            params, opt_st, t = carry
-            params, opt_st, losses, gns = jax.vmap(
-                local_step, in_axes=(0, 0, 0, None))(params, opt_st, mb, t)
-            return (params, opt_st, t + 1), (losses, gns)
-
-        (params, opt_st, t), (losses, gns) = jax.lax.scan(
-            micro, (p0, state.opt, state.t), batch)
+        params, opt_st, t, losses, gns = _scan_local_steps(
+            loss, opt, p0, state.opt, state.t, batch, base_lr=base_lr,
+            total_steps=total_steps, warmup=warmup, sam_rho=sam_rho)
         if engine is not None:
             params = engine.with_workers(state.params, params)
 
         round_idx = t // max(dcfg.tau, 1)
         lam_t = lam_schedule(dcfg.lam_schedule, dcfg.lam, round_idx,
                              total_rounds)
-        params, cstate, metrics = consensus.apply_round(
-            params, dcfg, lam_t, state.cstate,
-            losses=losses[-1], grad_norms=gns[-1], engine=engine)
+        if overlap:
+            # staleness-1: consensus of the PREVIOUS round's snapshot; its
+            # collectives have no data dependence on this round's scan, so
+            # the scheduler overlaps them with the tau local steps. The
+            # delta is applied to the fresh post-local-step view; the fresh
+            # view becomes the next round's snapshot.
+            snap = state.snap
+            c_out, cstate, metrics = consensus.apply_round(
+                snap["x"], dcfg, lam_t, state.cstate,
+                losses=snap["losses"], grad_norms=snap["gns"], engine=engine)
+            new_snap = {"x": params, "losses": losses[-1], "gns": gns[-1]}
+            # explicit round-0 pipeline bubble: the init snapshot is
+            # (usually) collapsed, and consensus of a collapsed fleet is
+            # noise-floor push (engine docstring) — skip the first delta
+            live = (state.t > 0).astype(jnp.float32)
+            params = params + live * (c_out - snap["x"])
+        else:
+            params, cstate, metrics = consensus.apply_round(
+                params, dcfg, lam_t, state.cstate,
+                losses=losses[-1], grad_norms=gns[-1], engine=engine)
+            new_snap = state.snap
         metrics = dict(metrics)
         metrics["train_loss"] = losses.mean()
         metrics["lam_t"] = lam_t
         new_state = TrainState(params=params, opt=opt_st, cstate=cstate, t=t,
+                               snap=new_snap, engine=engine)
+        return new_state, metrics
+
+    return round_step
+
+
+def _axis_entry(axes):
+    """PartitionSpec entry for an axis group (None when empty)."""
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _lin_index(axes, sizes):
+    """Linear shard index over an ordered axis group (row-major, matching
+    ``lax.all_gather(..., axes, tiled=True)`` concatenation order)."""
+    idx = 0
+    for a in axes:
+        idx = idx * sizes[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
+                            mesh, plan, base_lr: float, total_steps: int,
+                            warmup: int = 0, sam_rho: float = 0.0,
+                            total_rounds: Optional[int] = None):
+    """Build the DPPF round lowered under ``jax.shard_map`` (flat engine
+    only): worker rows of the (R, n) view shard over ``plan.worker_axes``,
+    columns over ``plan.fsdp_axes + plan.model_axes``.
+
+    Collective placement (DESIGN.md §Sharded-execution): the tau local
+    steps run on column-gathered local worker rows with ZERO worker-axis
+    collectives; the round boundary all-gathers worker rows per column
+    shard (the paper's one consensus all-reduce, Table 2) and the engine
+    completes its Gram with an (R, R) psum over the column axes. The
+    (M, M)-sized coefficient math and the mixing GEMM are shard-local.
+    With ``dcfg.overlap == "staleness1"`` the consensus reads the
+    round-(k-1) snapshot (rows replicated, columns sharded), so its
+    gather/psum have no data dependence on this round's scan and overlap
+    with the local compute.
+
+    Requires M divisible by the worker-axes size; columns fall back to
+    replicated (with the psum a no-op) when n is not divisible by the
+    column-axes size. jit with ``donate_argnums=0`` at the callsite, like
+    ``make_round_step``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    total_rounds = total_rounds or max(total_steps // max(dcfg.tau, 1), 1)
+    overlap = getattr(dcfg, "overlap", "none") == "staleness1"
+    row_axes = tuple(plan.worker_axes)
+    col_axes = tuple(plan.fsdp_axes) + tuple(plan.model_axes)
+    sizes = dict(mesh.shape)
+    row_size = math.prod(sizes[a] for a in row_axes) if row_axes else 1
+
+    def round_step(state: TrainState, batch):
+        engine = state.engine
+        if engine is None:
+            raise ValueError("make_sharded_round_step requires the flat "
+                             "engine (DPPFConfig.engine='flat')")
+        L = engine.layout
+        M, n, aux = L.M, L.n, L.aux
+        if row_size > 1 and M % row_size:
+            raise ValueError(
+                f"workers ({M}) not divisible over worker axes "
+                f"{row_axes} (size {row_size})")
+        from repro.launch.mesh import flat_col_entry
+        # divisibility fallback (the shared rule): replicate columns, the
+        # psum then degenerates to a no-op
+        col_e = flat_col_entry(mesh, n, plan)
+        eff_cols = col_axes if col_e is not None else ()
+        cols = math.prod(sizes[a] for a in eff_cols) if eff_cols else 1
+        n_loc, m_loc = n // cols, M // row_size
+        s_engine = dataclasses.replace(engine, shard=ShardedLayout(
+            row_axes=row_axes, col_axes=eff_cols, rows=row_size, cols=cols))
+        row_e = _axis_entry(row_axes)
+
+        def leading_dim_spec(leaf, entry, offset=0):
+            nd = jnp.ndim(leaf)
+            return P(*([None] * offset + [entry] + [None] * (nd - offset - 1))) \
+                if nd > offset else P()
+
+        def mapped(w_loc, opt_loc, t0, b_loc, *rest):
+            rest = list(rest)
+            aux_loc = rest.pop(0) if aux else None
+            snap_x, snap_l, snap_g = (rest if overlap else (None, None, None))
+
+            # tau local steps on column-gathered local worker rows
+            w_full = jax.lax.all_gather(w_loc, eff_cols, axis=1, tiled=True) \
+                if eff_cols else w_loc
+            loss = lambda row, b: loss_fn(engine.unflatten_row(row), b)
+            params, opt_st, t, losses, gns = _scan_local_steps(
+                loss, opt, w_full, opt_loc, t0, b_loc, base_lr=base_lr,
+                total_steps=total_steps, warmup=warmup, sam_rho=sam_rho)
+
+            # round boundary: back to own columns, gather worker rows
+            if eff_cols:
+                c_idx = _lin_index(eff_cols, sizes)
+                q_loc = jax.lax.dynamic_slice_in_dim(
+                    params, c_idx * n_loc, n_loc, 1)
+            else:
+                q_loc = params
+            if row_size > 1:
+                q_rows = jax.lax.all_gather(q_loc, row_axes, axis=0,
+                                            tiled=True)
+                l_last = jax.lax.all_gather(losses[-1], row_axes, tiled=True)
+                g_last = jax.lax.all_gather(gns[-1], row_axes, tiled=True)
+            else:
+                q_rows, l_last, g_last = q_loc, losses[-1], gns[-1]
+            X = jnp.concatenate([q_rows, aux_loc], axis=0) if aux else q_rows
+
+            round_idx = t // max(dcfg.tau, 1)
+            lam_t = lam_schedule(dcfg.lam_schedule, dcfg.lam, round_idx,
+                                 total_rounds)
+            if overlap:
+                c_out, cstate, metrics = consensus.apply_round(
+                    snap_x, dcfg, lam_t, state.cstate,
+                    losses=snap_l, grad_norms=snap_g, engine=s_engine)
+                new_snap_x = X
+                # round-0 pipeline bubble, as in make_round_step
+                live = (t0 > 0).astype(jnp.float32)
+                newX = X + live * (c_out - snap_x)
+            else:
+                newX, cstate, metrics = consensus.apply_round(
+                    X, dcfg, lam_t, state.cstate,
+                    losses=l_last, grad_norms=g_last, engine=s_engine)
+                new_snap_x = None
+
+            # slice own worker rows back out of the mixed view
+            if row_size > 1:
+                new_w = jax.lax.dynamic_slice_in_dim(
+                    newX[:M], _lin_index(row_axes, sizes) * m_loc, m_loc, 0)
+            else:
+                new_w = newX[:M]
+            train_loss = losses.mean()
+            if row_size > 1:
+                train_loss = jax.lax.pmean(train_loss, row_axes)
+            metrics = dict(metrics)
+            metrics["train_loss"] = train_loss
+            metrics["lam_t"] = lam_t
+            outs = [new_w, opt_st, t, metrics]
+            if aux:
+                outs.append(newX[M:])
+            if overlap:
+                outs.extend([new_snap_x, l_last, g_last])
+            return tuple(outs)
+
+        opt_in = jax.tree.map(lambda l: leading_dim_spec(l, row_e), state.opt)
+        batch_in = jax.tree.map(lambda l: leading_dim_spec(l, row_e, 1),
+                                batch)
+        metric_out = {k: P() for k in ("consensus_dist", "pre_dist",
+                                       "pull_force", "push_force",
+                                       "train_loss", "lam_t")}
+        args = [engine.workers(state.params), state.opt, state.t, batch]
+        in_specs = [P(row_e, col_e), opt_in, P(), batch_in]
+        out_specs = [P(row_e, col_e), opt_in, P(), metric_out]
+        if aux:
+            args.append(state.params[M:])
+            in_specs.append(P(None, col_e))
+            out_specs.append(P(None, col_e))
+        if overlap:
+            # snapshot rows are replicated (every column shard needs the
+            # full R rows to mix), columns sharded like the live view
+            args.extend([state.snap["x"], state.snap["losses"],
+                         state.snap["gns"]])
+            in_specs.extend([P(None, col_e), P(), P()])
+            out_specs.extend([P(None, col_e), P(), P()])
+
+        res = list(shard_map(
+            mapped, mesh=mesh, in_specs=tuple(in_specs),
+            out_specs=tuple(out_specs), check_rep=False)(*args))
+        new_w, opt_st, t, metrics = res[:4]
+        rest = res[4:]
+        params = jnp.concatenate([new_w, rest.pop(0)], axis=0) if aux \
+            else new_w
+        snap = {"x": rest[0], "losses": rest[1], "gns": rest[2]} \
+            if overlap else state.snap
+        new_state = TrainState(params=params, opt=opt_st,
+                               cstate=state.cstate, t=t, snap=snap,
                                engine=engine)
         return new_state, metrics
 
     return round_step
+
+
+def shard_train_state(state: TrainState, mesh, plan):
+    """Place a flat-engine ``TrainState`` for ``make_sharded_round_step``:
+    the (R, n) view under the flat-view rule (`launch.mesh.
+    flat_view_sharding`), optimizer state over the worker axes, the
+    staleness-1 snapshot with replicated rows, scalars replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import flat_col_entry, flat_view_sharding
+
+    if state.engine is None:
+        raise ValueError("shard_train_state requires a flat-engine "
+                         "TrainState (DPPFConfig.engine='flat')")
+    row_e = _axis_entry(tuple(plan.worker_axes))
+
+    def put(leaf, spec):
+        return jax.device_put(leaf, NamedSharding(mesh, spec))
+
+    def opt_put(leaf):
+        nd = jnp.ndim(leaf)
+        return put(leaf, P(*([row_e] + [None] * (nd - 1))) if nd else P())
+
+    params = jax.device_put(
+        state.params, flat_view_sharding(mesh, state.params.shape, plan))
+    snap = state.snap
+    if snap is not None:
+        col_e = flat_col_entry(mesh, snap["x"].shape[1], plan)
+        snap = {"x": put(snap["x"], P(None, col_e)),
+                "losses": put(snap["losses"], P()),
+                "gns": put(snap["gns"], P())}
+    return TrainState(params=params, opt=jax.tree.map(opt_put, state.opt),
+                      cstate=state.cstate, t=put(state.t, P()), snap=snap,
+                      engine=state.engine)
 
 
 def make_ddp_step(loss_fn, opt: Optimizer, *, base_lr: float,

@@ -68,6 +68,61 @@ ENTRY %main (a: f32[8,128]) -> f32[8,128] {
     assert res["collectives"]["all-reduce"]["count"] == 5
 
 
+def test_hierarchical_mesh_bad_shape_raises_value_error():
+    """Shape validation must survive ``python -O`` (ValueError, not a bare
+    assert) and name the offending shape."""
+    from repro.launch.mesh import make_hierarchical_mesh
+    with pytest.raises(ValueError, match=r"4x4x4 = 64 .* 256"):
+        make_hierarchical_mesh(4, 4, 4)
+    with pytest.raises(ValueError, match=r"multi-pod"):
+        make_hierarchical_mesh(8, 4, 4, multi_pod=True)
+
+
+def test_flat_view_and_batch_shardings_8dev():
+    """flat_view_sharding (rows -> worker axes, cols -> fsdp/model axes,
+    divisibility fallbacks) and batch_shardings on an 8-device
+    (data, fsdp, model) host mesh."""
+    body = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np, json
+from jax.sharding import Mesh
+from repro.launch.mesh import batch_shardings, flat_view_sharding
+from repro.configs import MeshPlan
+mesh = Mesh(np.asarray(jax.devices()).reshape(2, 2, 2),
+            ("data", "fsdp", "model"))
+plan = MeshPlan(worker_axes=("data",), fsdp_axes=("fsdp",),
+                model_axes=("model",))
+out = {}
+# rows 8 % 2 == 0, cols 1000 % 4 == 0 -> fully sharded
+out["full"] = str(flat_view_sharding(mesh, (8, 1000), plan).spec)
+# aux row breaks row divisibility -> rows replicate
+out["aux"] = str(flat_view_sharding(mesh, (9, 1000), plan).spec)
+# odd column count -> columns replicate
+out["oddcol"] = str(flat_view_sharding(mesh, (8, 1001), plan).spec)
+# no fsdp axes -> cols over model only
+plan2 = MeshPlan(worker_axes=("data", "fsdp"), model_axes=("model",))
+out["wide_workers"] = str(flat_view_sharding(mesh, (8, 1000), plan2).spec)
+# round batches (tau, M, B, ...): M over workers, B over fsdp
+batch = {"x": np.zeros((2, 8, 16, 32)), "y": np.zeros((2, 8, 16))}
+sh = batch_shardings(mesh, batch, plan)
+out["bx"] = str(sh["x"].spec)
+out["by"] = str(sh["y"].spec)
+print(json.dumps(out))
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                         text=True, env=env, timeout=240)
+    assert out.returncode == 0, out.stderr
+    got = json.loads(out.stdout.strip().splitlines()[-1])
+    assert got["full"] == "PartitionSpec('data', ('fsdp', 'model'))"
+    assert got["aux"] == "PartitionSpec(None, ('fsdp', 'model'))"
+    assert got["oddcol"] == "PartitionSpec('data', None)"
+    assert got["wide_workers"] == "PartitionSpec(('data', 'fsdp'), 'model')"
+    assert got["bx"] == "PartitionSpec(None, 'data', 'fsdp', None)"
+    assert got["by"] == "PartitionSpec(None, 'data', 'fsdp')"
+
+
 def test_leaf_spec_divisibility_fallback():
     """Vocab 256206 is not divisible by 16 -> the model axis must fall back
     to the d_model dim; undividable head dims replicate."""

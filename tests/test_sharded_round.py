@@ -1,0 +1,416 @@
+"""Sharded ConsensusEngine rounds: shard_map parity for every method,
+staleness-1 overlap (two-buffer reference + convergence), split kernel
+phases with the psum epilogue, and train-state checkpoint resume.
+
+Multi-device lowering runs in a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (same pattern as
+test_launch_sharding.py); single-device tests exercise the identical code
+path on a 1x1 mesh in-process."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_train_state, save_train_state
+from repro.configs import DPPFConfig, MeshPlan
+from repro.core import consensus
+from repro.optim import make_optimizer
+from repro.train import (
+    init_train_state, make_round_step, make_sharded_round_step,
+    shard_train_state,
+)
+from repro.train.trainer import TrainState
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _mlp_setup(M=4, tau=2, dim=16, ncls=4, width=8):
+    from benchmarks.common import mlp_init, mlp_loss
+    opt = make_optimizer("sgd", momentum=0.9)
+    p0 = lambda k: mlp_init(k, dim, ncls, width)
+
+    def batches(seed):
+        k = jax.random.PRNGKey(seed)
+        return {"x": jax.random.normal(k, (tau, M, 8, dim)),
+                "y": jax.random.randint(jax.random.fold_in(k, 1),
+                                        (tau, M, 8), 0, ncls)}
+    return opt, p0, mlp_loss, batches
+
+
+# ---------------------------------------------------------------------------
+# staleness-1 overlap: config plumbing, reference parity, convergence
+# ---------------------------------------------------------------------------
+
+def test_overlap_requires_flat_engine():
+    with pytest.raises(ValueError, match="staleness1"):
+        DPPFConfig(engine="tree", overlap="staleness1")
+    with pytest.raises(ValueError, match="bogus"):
+        DPPFConfig(overlap="bogus")
+    # ddp never builds a flat engine -> the snapshot has nowhere to live
+    opt, p0, loss, _ = _mlp_setup()
+    dcfg = DPPFConfig(engine="flat", overlap="staleness1", consensus="ddp")
+    with pytest.raises(ValueError, match="staleness1"):
+        init_train_state(p0, opt, dcfg, 4, jax.random.PRNGKey(0))
+
+
+@pytest.mark.parametrize("method", ["simple_avg", "easgd"])
+def test_overlap_matches_two_buffer_reference(method):
+    """The fused staleness-1 round must equal the explicit two-buffer
+    scheme: x_{k+1} = q_k + (C(s_k) - s_k), s_{k+1} = q_k, with q from a
+    pure-local-steps (identity-consensus) round and C the exact engine
+    consensus of the snapshot."""
+    M, tau = 4, 2
+    opt, p0, loss, batches = _mlp_setup(M=M, tau=tau)
+    dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, consensus=method,
+                      engine="flat", overlap="staleness1",
+                      lam_schedule="fixed")
+    key = jax.random.PRNGKey(0)
+
+    st = init_train_state(p0, opt, dcfg, M, key)
+    eng = st.engine
+    assert st.snap is not None and st.snap["x"].shape == st.params.shape
+    step = jax.jit(make_round_step(loss, opt, dcfg, base_lr=0.05,
+                                   total_steps=20))
+
+    # reference: local steps via an identity-consensus (ddp) round on the
+    # same engine, stale consensus applied by hand
+    dcfg_local = dataclasses.replace(dcfg, consensus="ddp", overlap="none")
+    local_only = jax.jit(make_round_step(loss, opt, dcfg_local, base_lr=0.05,
+                                         total_steps=20))
+    st_ref = TrainState(params=st.params + 0.0,
+                        opt=jax.tree.map(jnp.copy, st.opt),
+                        cstate={}, t=st.t, engine=eng)
+    snap = st.params + 0.0
+    cstate = {}
+    for r in range(4):
+        b = batches(r)
+        st, m = step(st, b)
+        st_ref, _ = local_only(st_ref, b)
+        q = st_ref.params
+        c_out, cstate, _ = consensus.apply_round(
+            snap, dcfg, float(m["lam_t"]), cstate, engine=eng)
+        # round 0 is the explicit pipeline bubble (no delta applied)
+        st_ref = dataclasses.replace(
+            st_ref, params=q + (c_out - snap) if r > 0 else q)
+        snap = q
+        np.testing.assert_allclose(np.asarray(st.params),
+                                   np.asarray(st_ref.params),
+                                   atol=1e-5, rtol=1e-5, err_msg=f"round {r}")
+        np.testing.assert_allclose(np.asarray(st.snap["x"]),
+                                   np.asarray(snap), atol=1e-5, rtol=1e-5)
+
+
+def test_overlap_round0_is_local_steps_only():
+    """Round 0 is the explicit pipeline bubble: zero consensus delta, so
+    params match a pure-local-step round (up to XLA fusion ulps — the two
+    jit programs schedule the scan differently)."""
+    M, tau = 4, 2
+    opt, p0, loss, batches = _mlp_setup(M=M, tau=tau)
+    base = dict(alpha=0.2, lam=0.4, tau=tau, engine="flat")
+    key = jax.random.PRNGKey(3)
+    st_o = init_train_state(p0, opt, DPPFConfig(overlap="staleness1", **base),
+                            M, key)
+    eng = st_o.engine
+    st_l = TrainState(params=st_o.params + 0.0,
+                      opt=jax.tree.map(jnp.copy, st_o.opt), cstate={},
+                      t=st_o.t, engine=eng)
+    b = batches(0)
+    st_o, _ = jax.jit(make_round_step(
+        loss, opt, DPPFConfig(overlap="staleness1", **base),
+        base_lr=0.05, total_steps=20))(st_o, b)
+    st_l, _ = jax.jit(make_round_step(
+        loss, opt, DPPFConfig(consensus="ddp", **base),
+        base_lr=0.05, total_steps=20))(st_l, b)
+    np.testing.assert_allclose(np.asarray(st_o.params),
+                               np.asarray(st_l.params), atol=1e-7, rtol=0)
+
+
+def test_overlap_converges_close_to_exact():
+    from benchmarks.common import default_data, run_distributed
+    data = default_data()
+    base = DPPFConfig(alpha=0.2, lam=0.8, tau=4, engine="flat",
+                      lam_schedule="fixed")
+    r_exact = run_distributed(data, base, M=4, steps=200)
+    r_stale = run_distributed(
+        data, dataclasses.replace(base, overlap="staleness1"), M=4,
+        steps=200)
+    assert np.isfinite(r_stale.test_err)
+    # staleness-1 shifts forces by one round; end-task quality must hold
+    assert abs(r_stale.test_err - r_exact.test_err) < 10.0
+    assert np.isfinite(r_stale.consensus_dist)
+
+
+# ---------------------------------------------------------------------------
+# split kernel phases: partial Grams add across column shards
+# ---------------------------------------------------------------------------
+
+def test_partial_gram_plus_mix_match_fused_round():
+    from repro.kernels.pullpush import (
+        fused_round, fused_round_ref, mix_shard, partial_gram,
+    )
+    key = jax.random.PRNGKey(1)
+    R, n = 5, 1000
+    flat = jax.random.normal(key, (R, n)) * 2.0 + 1.0
+    T = jax.nn.softmax(jax.random.normal(jax.random.fold_in(key, 1), (R, R)))
+    c0 = jnp.linspace(0.1, 0.5, R)
+    c1 = jnp.linspace(-0.4, -0.1, R)
+    want, r_want = fused_round_ref(flat, T, c0, c1)
+    got_fused, r_fused, _ = fused_round(flat, T, c0, c1, block_cols=256)
+
+    # simulate 4 column shards: psum == plain sum of the partial Grams
+    shards = jnp.split(flat, 4, axis=1)
+    G = sum(partial_gram(s, block_cols=256) for s in shards)
+    V = jnp.eye(R) - T
+    r = jnp.sqrt(jnp.maximum(jnp.sum((V @ G) * V, axis=1), 0.0))
+    coef = c0 + c1 / jnp.maximum(r, 1e-12)
+    out = jnp.concatenate(
+        [mix_shard(s, T, coef, block_cols=256) for s in shards], axis=1)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_want), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(r_fused), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(got_fused),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_partial_gram_centered_cancellation_safe():
+    """Per-shard block-centering must survive the cross-shard sum: workers
+    clustered far from the origin keep ~1e-5 relative distance accuracy."""
+    from repro.kernels.pullpush import partial_gram
+    key = jax.random.PRNGKey(2)
+    n, M = 4096, 4
+    base = jax.random.normal(key, (n,)) * 3.0 + 5.0
+    flat = base[None] + 0.05 * jax.random.normal(
+        jax.random.fold_in(key, 1), (M, n))
+    G = sum(partial_gram(s, block_cols=512) for s in jnp.split(flat, 2, 1))
+    T = jnp.full((M, M), 1.0 / M)
+    V = jnp.eye(M) - T
+    r = np.sqrt(np.maximum(np.asarray(jnp.sum((V @ G) * V, axis=1)), 0.0))
+    f64 = np.asarray(flat, np.float64)
+    r_true = np.sqrt(((f64 - f64.mean(0)) ** 2).sum(1))
+    np.testing.assert_allclose(r, r_true, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# sharded round on a 1x1 mesh (same program, trivial collectives)
+# ---------------------------------------------------------------------------
+
+def test_sharded_round_single_device_mesh_matches_plain():
+    from repro.launch.mesh import make_cpu_mesh
+    M, tau = 4, 2
+    opt, p0, loss, batches = _mlp_setup(M=M, tau=tau)
+    mesh = make_cpu_mesh()
+    plan = MeshPlan(worker_axes=("data",), model_axes=("model",))
+    dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, engine="flat")
+    key = jax.random.PRNGKey(0)
+    st1 = init_train_state(p0, opt, dcfg, M, key)
+    st2 = shard_train_state(init_train_state(p0, opt, dcfg, M, key),
+                            mesh, plan)
+    f1 = jax.jit(make_round_step(loss, opt, dcfg, base_lr=0.05,
+                                 total_steps=20))
+    f2 = jax.jit(make_sharded_round_step(loss, opt, dcfg, mesh=mesh,
+                                         plan=plan, base_lr=0.05,
+                                         total_steps=20))
+    for r in range(2):
+        st1, m1 = f1(st1, batches(r))
+        st2, m2 = f2(st2, batches(r))
+    np.testing.assert_allclose(np.asarray(st1.params), np.asarray(st2.params),
+                               atol=1e-6, rtol=1e-6)
+    for k in ("consensus_dist", "pre_dist", "train_loss"):
+        np.testing.assert_allclose(float(m1[k]), float(m2[k]), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_sharded_round_multi_axis_worker_group_and_tree_rejection():
+    import numpy as onp
+    from jax.sharding import Mesh
+    M, tau = 3, 2
+    opt, p0, loss, batches = _mlp_setup(M=M, tau=tau)
+    dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, engine="flat")
+    st = init_train_state(p0, opt, dcfg, M, jax.random.PRNGKey(0))
+    devs = onp.asarray(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    # a multi-axis worker group (size 1x1 here) must plumb through
+    plan = MeshPlan(worker_axes=("data", "model"), model_axes=())
+    step = make_sharded_round_step(loss, opt, dcfg, mesh=mesh, plan=plan,
+                                   base_lr=0.05, total_steps=20)
+    st, _ = jax.jit(step)(st, batches(0))
+    assert st.params.shape == (M, st.engine.layout.n)
+    # tree-engine state must be rejected outright
+    dcfg_tree = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, engine="tree")
+    st_tree = init_train_state(p0, opt, dcfg_tree, M, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="flat"):
+        make_sharded_round_step(loss, opt, dcfg_tree, mesh=mesh, plan=plan,
+                                base_lr=0.05, total_steps=20)(
+                                    st_tree, batches(0))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint: mid-run resume == straight-through
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("overlap", ["none", "staleness1"])
+def test_train_state_checkpoint_resume_matches_straight_run(tmp_path,
+                                                            overlap):
+    M, tau = 4, 2
+    opt, p0, loss, batches = _mlp_setup(M=M, tau=tau)
+    dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, engine="flat",
+                      overlap=overlap)
+    key = jax.random.PRNGKey(0)
+    step = jax.jit(make_round_step(loss, opt, dcfg, base_lr=0.05,
+                                   total_steps=20), donate_argnums=0)
+
+    straight = init_train_state(p0, opt, dcfg, M, key)
+    resumed = init_train_state(p0, opt, dcfg, M, key)
+    for r in range(2):
+        straight, _ = step(straight, batches(r))
+        resumed, _ = step(resumed, batches(r))
+    path = str(tmp_path / "state.npz")
+    save_train_state(path, resumed)
+
+    # fresh template (same config/seed), restore, continue
+    template = init_train_state(p0, opt, dcfg, M, key)
+    resumed = load_train_state(path, template)
+    assert int(resumed.t) == 2 * tau
+    if overlap == "staleness1":
+        assert resumed.snap is not None
+    for r in range(2, 4):
+        straight, _ = step(straight, batches(r))
+        resumed, _ = step(resumed, batches(r))
+    np.testing.assert_array_equal(np.asarray(straight.params),
+                                  np.asarray(resumed.params))
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), straight.opt, resumed.opt)
+
+
+def test_load_train_state_format_guard_and_snap_fallback(tmp_path):
+    from repro.checkpoint import save_pytree
+    M, tau = 4, 2
+    opt, p0, loss, batches = _mlp_setup(M=M, tau=tau)
+    key = jax.random.PRNGKey(0)
+
+    # a final-params (serving) checkpoint is a different format: clear error
+    bad = str(tmp_path / "final.npz")
+    save_pytree(bad, {"w": np.zeros((3, 3))})
+    dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, engine="flat")
+    template = init_train_state(p0, opt, dcfg, M, key)
+    with pytest.raises(ValueError, match="train-state"):
+        load_train_state(bad, template)
+
+    # a mid-run checkpoint saved WITHOUT a snapshot (exact mode) resumes
+    # into an overlap run with the RESTORED params as warm-start snapshot
+    # (not the init fleet — its stale delta would jolt trained params)
+    exact_state = init_train_state(p0, opt, dcfg, M, key)
+    step = jax.jit(make_round_step(loss, opt, dcfg, base_lr=0.05,
+                                   total_steps=20))
+    exact_state, _ = step(exact_state, batches(0))
+    path = str(tmp_path / "exact.npz")
+    save_train_state(path, exact_state)
+    dcfg_o = dataclasses.replace(dcfg, overlap="staleness1")
+    tmpl_o = init_train_state(p0, opt, dcfg_o, M, key)
+    resumed = load_train_state(path, tmpl_o)
+    assert resumed.snap is not None and int(resumed.t) == tau
+    np.testing.assert_array_equal(np.asarray(resumed.snap["x"]),
+                                  np.asarray(exact_state.params))
+    np.testing.assert_array_equal(np.asarray(resumed.params),
+                                  np.asarray(exact_state.params))
+
+
+# ---------------------------------------------------------------------------
+# the real thing: 8 forced host devices, every method, both engine modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_parity_8dev_all_methods():
+    """One shard_map round on a (4 workers x 2 columns) host mesh vs the
+    single-device flat engine, for every consensus method: bit-for-bit in
+    precise mode (ulp-level for lsgd's argmin tie-breaks), Gram-floor
+    tolerance otherwise; kernel path and staleness-1 overlap included."""
+    body = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, json
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import DPPFConfig, MeshPlan
+from repro.core import consensus
+from repro.train import (init_train_state, make_round_step,
+                         make_sharded_round_step, shard_train_state)
+from repro.optim import make_optimizer
+from benchmarks.common import mlp_init, mlp_loss
+
+dim, ncls, width, M, tau = 16, 4, 8, 4, 2
+key = jax.random.PRNGKey(0)
+opt = make_optimizer("sgd", momentum=0.9)
+p0 = lambda k: mlp_init(k, dim, ncls, width)
+def batches(seed):
+    k = jax.random.PRNGKey(seed)
+    return {"x": jax.random.normal(k, (tau, M, 8, dim)),
+            "y": jax.random.randint(jax.random.fold_in(k, 1),
+                                    (tau, M, 8), 0, ncls)}
+mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+plan = MeshPlan(worker_axes=("data",), model_axes=("model",))
+MKEYS = ("consensus_dist", "pre_dist", "pull_force", "push_force",
+         "train_loss", "lam_t")
+
+def run_pair(dcfg, engine_patch=None, rounds=2):
+    st1 = init_train_state(p0, opt, dcfg, M, key)
+    if st1.engine is None:  # ddp: reuse the simple_avg layout (aux = 0)
+        st1 = init_train_state(
+            p0, opt, dataclasses.replace(dcfg, consensus="simple_avg"),
+            M, key)
+    if engine_patch:
+        st1 = dataclasses.replace(
+            st1, engine=dataclasses.replace(st1.engine, **engine_patch))
+    st2 = shard_train_state(st1, mesh, plan)
+    f1 = jax.jit(make_round_step(mlp_loss, opt, dcfg, base_lr=0.05,
+                                 total_steps=20))
+    f2 = jax.jit(make_sharded_round_step(mlp_loss, opt, dcfg, mesh=mesh,
+                                         plan=plan, base_lr=0.05,
+                                         total_steps=20))
+    for r in range(rounds):
+        st1, m1 = f1(st1, batches(r))
+        st2, m2 = f2(st2, batches(r))
+    dp = float(jnp.max(jnp.abs(st1.params - st2.params)))
+    dm = max(abs(float(m1[k]) - float(m2[k])) for k in MKEYS)
+    return dp, dm
+
+for method in consensus.METHODS:
+    dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, consensus=method,
+                      engine="flat")
+    dp, dm = run_pair(dcfg)
+    assert dp < 2e-5 and dm < 1e-4, (method, "fast", dp, dm)
+    dp, dm = run_pair(dcfg, engine_patch={"precise": True})
+    # bit-for-bit up to reduction-order ulps in the lsgd argmin input
+    assert dp <= 1e-7 and dm < 1e-6, (method, "precise", dp, dm)
+print("parity OK")
+
+# kernel path (interpret mode): split phases + psum epilogue under shard_map
+dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, engine="flat")
+dp, dm = run_pair(dcfg, engine_patch={"use_kernel": True, "interpret": True,
+                                      "block_cols": 64})
+assert dp < 2e-5 and dm < 1e-4, ("kernel", dp, dm)
+print("kernel OK")
+
+# staleness-1 overlap: sharded == single-device (precise engine)
+dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, engine="flat",
+                  overlap="staleness1", lam_schedule="fixed")
+dp, dm = run_pair(dcfg, engine_patch={"precise": True}, rounds=3)
+assert dp < 1e-6 and dm < 1e-5, ("overlap", dp, dm)
+print("overlap OK")
+print("ALL OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep + ROOT)
+    out = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                         text=True, env=env, timeout=560, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "ALL OK" in out.stdout
