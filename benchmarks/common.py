@@ -21,7 +21,7 @@ from repro.core import pullpush as pp
 from repro.data import classification_task
 from repro.optim import make_optimizer
 from repro.train import (
-    TrainState, average_params, init_train_state, make_ddp_step,
+    RoundClock, TrainState, average_params, init_train_state, make_ddp_step,
     make_round_step, stacked_params,
 )
 
@@ -131,43 +131,27 @@ def run_distributed(data, dcfg: DPPFConfig, *, M=4, bs=64, steps=400,
         comm_pct, cdist = 100.0, 0.0
     else:
         state = init_train_state(p0, opt, dcfg, M, key)
-        rounds_total = max(steps // dcfg.tau, 1)
-        # donation keeps the flat engine's view in place across rounds
-        step_fn = jax.jit(make_round_step(
-            mlp_loss, opt, dcfg, base_lr=lr, total_steps=steps,
-            sam_rho=sam_rho, total_rounds=rounds_total), donate_argnums=0)
-        from repro.core.schedules import cosine_lr, qsr_tau
-        t, comm_rounds = 0, 0
-        qsr_fns = {}
-        while t < steps:
-            if dcfg.qsr_beta > 0:
-                eta_t = float(cosine_lr(lr, t, steps))
-                tau_t = min(qsr_tau(eta_t, dcfg.tau, dcfg.qsr_beta),
-                            max(steps - t, 1))
-                if tau_t not in qsr_fns:
-                    import dataclasses as dc
-                    qsr_fns[tau_t] = jax.jit(make_round_step(
-                        mlp_loss, opt, dc.replace(dcfg, tau=tau_t),
-                        base_lr=lr, total_steps=steps, sam_rho=sam_rho,
-                        total_rounds=rounds_total), donate_argnums=0)
-                fn, tau_eff = qsr_fns[tau_t], tau_t
-            else:
-                fn, tau_eff = step_fn, dcfg.tau
-            b = round_batches(data, shards, rng, tau_eff, M, bs)
-            state, m = fn(state, b)
-            t += tau_eff
-            comm_rounds += 1
-            if track_every and (comm_rounds % track_every == 0):
+        # the RoundClock owns the round plan (fixed / remainder /
+        # QSR-adaptive taus) and both schedules; the tau-oblivious round
+        # builder retraces per batch shape, so jit's shape cache is the
+        # per-tau compile cache (DESIGN.md §Round-clock)
+        clock = RoundClock.from_config(dcfg, base_lr=lr, total_steps=steps)
+        step_fn = jax.jit(make_round_step(mlp_loss, opt, dcfg, clock=clock,
+                                          sam_rho=sam_rho), donate_argnums=0)
+        for spec in clock.rounds:
+            b = round_batches(data, shards, rng, spec.tau, M, bs)
+            state, m = step_fn(state, b)
+            if track_every and ((spec.index + 1) % track_every == 0):
                 history["consensus_dist"].append(float(m["consensus_dist"]))
                 history["pull"].append(float(m.get("pull_force", 0.0)))
                 history["push"].append(float(m.get("push_force", 0.0)))
                 history["lam"].append(float(m.get("lam_t", 0.0)))
-                history["step"].append(t)
+                history["step"].append(spec.stop)
         avg = average_params(state)
         stacked = stacked_params(state)   # tree view whichever engine ran
         workers = [jax.tree.map(lambda a, i=i: a[i], stacked)
                    for i in range(M)]
-        comm_pct = 100.0 * comm_rounds / steps
+        comm_pct = 100.0 * clock.total_rounds / steps
         cdist = float(pp.worker_dists(stacked).mean())
 
     train_err = error_pct(avg, data["x_train"], data["y_train"])

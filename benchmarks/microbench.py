@@ -1,14 +1,21 @@
 """Micro-benchmarks: us_per_call for the hot paths (flat ConsensusEngine vs
 tree-path consensus, fused pull-push vs naive, DPPF round vs DDP steps at
-equal token budget) on this host CPU. Wall-times are host-relative — the
-TPU story is §Roofline — but the RELATIVE comparison (flat-engine speedup,
-fused consensus cost, round amortization) holds.
+equal token budget, QSR RoundClock vs fixed tau) on this host CPU.
+Wall-times are host-relative — the TPU story is §Roofline — but the
+RELATIVE comparison (flat-engine speedup, fused consensus cost, round
+amortization, all-reduces saved) holds.
+
+Besides the CSV rows, ``run`` writes ``BENCH_roundclock.json`` at the repo
+root — rounds, all-reduce counts, and the engine-vs-tree row — so the perf
+trajectory is machine-readable across PRs.
 
 ``--smoke`` shrinks every size so the whole file runs in seconds (CI).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -21,7 +28,7 @@ from repro.core import pullpush as pp
 from repro.core.engine import ConsensusEngine
 from repro.optim import make_optimizer
 from repro.train import (
-    init_train_state, make_round_step, make_ddp_step,
+    RoundClock, init_train_state, make_round_step, make_ddp_step,
     make_sharded_round_step, shard_train_state,
 )
 from repro.train.trainer import TrainState
@@ -91,7 +98,9 @@ def bench_engine_vs_tree(*, smoke=False):
         speedup=round(us_tree / us_flat, 2),
         note="flat ConsensusEngine (persistent donated view) vs "
              "stacked-tree apply_round")
-    return us_tree / us_flat
+    return {"workers": M, "params_per_worker": n,
+            "us_tree": round(us_tree, 1), "us_engine": round(us_flat, 1),
+            "speedup": round(us_tree / us_flat, 2)}
 
 
 def bench_pullpush(*, smoke=False):
@@ -197,11 +206,63 @@ def bench_sharded_round(*, smoke=False):
              "consensus behind the tau local steps")
 
 
+def bench_roundclock(*, smoke=False):
+    """QSR RoundClock vs fixed tau: communication rounds (= consensus
+    all-reduces) saved at the same step budget, and the wall cost of the
+    re-chunked adaptive loop (incl. its extra per-tau compiles)."""
+    data = default_data()
+    opt = make_optimizer("sgd")
+    M, bs = 4, 16 if smoke else 64
+    steps = 64 if smoke else 512
+    lr, beta = 0.3, 0.4
+    batch = lambda tau: {"x": jnp.zeros((tau, M, bs, data["dim"])),
+                         "y": jnp.zeros((tau, M, bs), jnp.int32)}
+    init = lambda k: mlp_init(k, data["dim"], data["n_classes"])
+    out = {}
+    for sched, qb in (("fixed", 0.0), ("qsr", beta)):
+        dcfg = DPPFConfig(alpha=0.1, lam=0.5, tau=4, engine="flat",
+                          tau_schedule=sched, qsr_beta=qb)
+        clock = RoundClock.from_config(dcfg, base_lr=lr, total_steps=steps)
+        st = init_train_state(init, opt, dcfg, M, jax.random.PRNGKey(0))
+        fn = jax.jit(make_round_step(mlp_loss, opt, dcfg, clock=clock),
+                     donate_argnums=0)
+        t0 = time.perf_counter()
+        for spec in clock.rounds:
+            st, _ = fn(st, batch(spec.tau))
+        jax.block_until_ready(st.params)
+        wall = time.perf_counter() - t0
+        out[sched] = dict(clock.describe(), wall_s=round(wall, 3))
+        csv("microbench", op=f"roundclock_{sched}",
+            rounds=clock.total_rounds, allreduces=clock.total_rounds,
+            tau_min=min(clock.taus()), tau_max=max(clock.taus()),
+            wall_s=round(wall, 3))
+    saved = out["fixed"]["rounds"] - out["qsr"]["rounds"]
+    csv("microbench", op="roundclock",
+        allreduces_saved=saved,
+        saved_pct=round(100.0 * saved / out["fixed"]["rounds"], 1),
+        note="QSR adaptive tau vs fixed tau at the same step budget "
+             "(one consensus all-reduce per round)")
+    out["allreduces_saved"] = saved
+    out["allreduces_saved_pct"] = round(
+        100.0 * saved / out["fixed"]["rounds"], 1)
+    return out
+
+
 def run(*, smoke=False):
-    bench_engine_vs_tree(smoke=smoke)
+    engine_row = bench_engine_vs_tree(smoke=smoke)
     bench_pullpush(smoke=smoke)
     bench_round_vs_ddp(smoke=smoke)
     bench_sharded_round(smoke=smoke)
+    roundclock = bench_roundclock(smoke=smoke)
+    # machine-readable perf trajectory across PRs (repo root)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    payload = {"smoke": smoke, "backend": jax.default_backend(),
+               "roundclock": roundclock, "engine_vs_tree": engine_row}
+    path = os.path.join(root, "BENCH_roundclock.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
 
 
 if __name__ == "__main__":

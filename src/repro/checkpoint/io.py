@@ -49,7 +49,12 @@ def load_pytree(path, like):
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path_keys)
         arr = data[key]
-        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        if arr.shape != tuple(leaf.shape):
+            # ValueError, not assert: restore is a user-facing path and the
+            # shape check must survive python -O
+            raise ValueError(
+                f"checkpoint leaf {key!r} has shape {arr.shape}, template "
+                f"expects {tuple(leaf.shape)}")
         out.append(arr.astype(leaf.dtype))
     extra = {k.split(_SEP, 1)[1]: data[k] for k in data.files
              if k.startswith("__extra__")}
@@ -65,14 +70,19 @@ def _state_tree(state):
 
 def save_train_state(path, state):
     """Full ``TrainState`` -> npz: the flat (R, n) view (or stacked tree),
-    optimizer + consensus state, staleness-1 snapshot, and step counter.
-    The engine is static metadata and is NOT saved — the resume path
-    rebuilds it from the same config (`train.init_train_state`)."""
-    save_pytree(path, _state_tree(state),
-                extra={"t": np.asarray(jax.device_get(state.t))})
+    optimizer + consensus state, staleness-1 snapshot, and the clock
+    position (step AND round counters — with an adaptive tau schedule the
+    round index is not derivable from the step count and a naive
+    ``t // tau`` would mis-place the lam schedule on resume). The engine is
+    static metadata and is NOT saved — the resume path rebuilds it from the
+    same config (`train.init_train_state`)."""
+    extra = {"t": np.asarray(jax.device_get(state.t))}
+    if state.round is not None:
+        extra["round"] = np.asarray(jax.device_get(state.round))
+    save_pytree(path, _state_tree(state), extra=extra)
 
 
-def load_train_state(path, like, *, shardings=None):
+def load_train_state(path, like, *, shardings=None, clock=None):
     """Restore a ``save_train_state`` checkpoint into the structure of
     ``like`` (a freshly initialized ``TrainState`` from the same config —
     its engine metadata is kept). ``shardings``, when given, is a pytree of
@@ -82,7 +92,16 @@ def load_train_state(path, like, *, shardings=None):
     snapshot (an exact-mode run) resumes into an overlap run with the
     RESTORED params as warm-start snapshot — the steady-state carry, not
     the init fleet, whose stale delta would jolt late-training params (the
-    round-0 bubble only gates t == 0). Returns the resumed ``TrainState``.
+    round-0 bubble only gates t == 0).
+
+    The clock position restores from the checkpoint's ``round`` extra; for
+    pre-RoundClock checkpoints that only carried ``t``, pass the run's
+    ``clock`` (`train.RoundClock`) and the round is recovered via
+    ``clock.round_of_step``. Without a clock the restored ``round`` is None
+    — NOT the template's fresh 0, which would restart the lam schedule —
+    so the round builders' pre-scan ``t // tau`` fallback engages (correct
+    for the fixed-tau runs all pre-clock checkpoints came from). Returns
+    the resumed ``TrainState``.
     """
     file = path if path.endswith(".npz") else path + ".npz"
     with np.load(file) as data:
@@ -103,7 +122,14 @@ def load_train_state(path, like, *, shardings=None):
         for k, sh in shardings.items():
             if k in tree:
                 tree[k] = jax.device_put(tree[k], sh)
+    jnp = jax.numpy
+    if "round" in extra:
+        rnd = jnp.asarray(extra["round"], jnp.int32)
+    elif clock is not None:
+        rnd = jnp.asarray(clock.round_of_step(int(extra["t"])), jnp.int32)
+    else:
+        rnd = None
     return dataclasses.replace(
         like, params=tree["params"], opt=tree["opt"], cstate=tree["cstate"],
-        snap=tree.get("snap", like.snap),
-        t=jax.numpy.asarray(extra["t"], jax.numpy.int32))
+        snap=tree.get("snap", like.snap), round=rnd,
+        t=jnp.asarray(extra["t"], jnp.int32))

@@ -251,7 +251,13 @@ class DPPFConfig:
     consensus: str = "simple_avg"       # simple_avg | easgd | lsgd | mgrawa | hard | ddp
     push: bool = True           # False => vanilla soft-consensus baseline
     exact_second_term: bool = False     # keep T2 (ablation §D.1)
-    qsr_beta: float = 0.0       # >0 => QSR tau schedule on top (baseline)
+    # communication-period schedule (train.clock.RoundClock): "fixed" keeps
+    # tau constant; "qsr" adapts it to the cosine LR per the Quadratic
+    # Synchronization Rule (Gu et al. 2024, paper §7.2)
+    tau_schedule: str = "fixed"
+    qsr_beta: float = 0.0       # QSR: tau_t = max(tau, floor((beta/eta)^2));
+                                # >0 also opts into QSR when tau_schedule
+                                # was left at "fixed" (legacy convention)
     eps: float = 1e-12          # norm guard
     # consensus execution engine: "tree" walks the stacked pytree (reference
     # path), "flat" runs every method on the persistent (R, n) flat view
@@ -266,10 +272,15 @@ class DPPFConfig:
     overlap: str = "none"
 
     def __post_init__(self):
-        assert self.engine in ("tree", "flat"), (
-            f"unknown consensus engine {self.engine!r}")
-        # ValueError, not assert: must survive python -O (a silently
-        # dropped overlap check would train without the promised overlap)
+        # ValueError, not assert: every check here guards a user-facing
+        # config path and must survive python -O (a silently dropped check
+        # would train with a misconfigured engine/schedule/overlap)
+        if self.engine not in ("tree", "flat"):
+            raise ValueError(f"unknown consensus engine {self.engine!r}")
+        if self.tau_schedule not in ("fixed", "qsr"):
+            raise ValueError(f"unknown tau schedule {self.tau_schedule!r}")
+        if self.tau_schedule == "qsr" and self.qsr_beta <= 0:
+            raise ValueError("tau_schedule='qsr' needs qsr_beta > 0")
         if self.overlap not in ("none", "staleness1"):
             raise ValueError(f"unknown overlap mode {self.overlap!r}")
         if self.overlap == "staleness1" and self.engine != "flat":

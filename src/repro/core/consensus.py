@@ -71,12 +71,15 @@ def consensus_target(method, stacked, state, *, losses=None, grad_norms=None,
             lambda zc, a: zc + easgd_beta * (a - zc), z, xa)
         return z_new, {"center": z_new}, None
     if method == "lsgd":
-        assert losses is not None, "lsgd needs per-worker losses"
+        if losses is None:
+            # ValueError, not assert: user-facing path, must survive -O
+            raise ValueError("lsgd needs per-worker losses")
         idx = jnp.argmin(losses)
         leader = jax.tree.map(lambda a: a.astype(jnp.float32)[idx], stacked)
         return leader, state, idx
     if method == "mgrawa":
-        assert grad_norms is not None, "mgrawa needs per-worker grad norms"
+        if grad_norms is None:
+            raise ValueError("mgrawa needs per-worker grad norms")
         w = 1.0 / jnp.maximum(grad_norms, 1e-12)
         w = w / jnp.sum(w)
         target = jax.tree.map(
@@ -195,12 +198,14 @@ def _apply_round_flat(engine, flat, dcfg, lam_t, state, *, losses, grad_norms,
                 T1 = jnp.broadcast_to(w_z, (R, R))
                 c_pull = c_pull.at[M:].set(1.0)
             elif method == "lsgd":
-                assert losses is not None, "lsgd needs per-worker losses"
+                if losses is None:
+                    raise ValueError("lsgd needs per-worker losses")
                 leader_w = jax.nn.one_hot(jnp.argmin(losses), R,
                                           dtype=jnp.float32)
                 T1 = worker_T(leader_w)
             elif method == "mgrawa":
-                assert grad_norms is not None, "mgrawa needs grad norms"
+                if grad_norms is None:
+                    raise ValueError("mgrawa needs grad norms")
                 w = 1.0 / jnp.maximum(grad_norms, 1e-12)
                 w = w / jnp.sum(w)
                 T1 = worker_T(zeros.at[:M].set(w))

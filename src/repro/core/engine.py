@@ -349,9 +349,11 @@ class ConsensusEngine:
         return new, r, pre, post
 
     def dists_to_mean(self, flat):
-        """Exact per-worker distances to the worker mean (gap-space)."""
-        R, M = self.layout.R, self.layout.M
-        u = self.uniform
-        g = jnp.broadcast_to(u, (R, R)) @ flat - flat
-        d2 = self._colsum(jnp.diagonal(g @ g.T))
-        return jnp.sqrt(jnp.maximum(d2, 0.0))[:M]
+        """Exact per-worker distances to the worker mean (gap-space).
+        Row-wise sum of squares — O(Mn), no (R, R) Gram for a diagonal
+        (the ddp metrics branch hits this every round)."""
+        M = self.layout.M
+        w = flat[:M].astype(jnp.float32)
+        g = jnp.mean(w, axis=0, keepdims=True) - w
+        d2 = self._colsum(jnp.sum(g * g, axis=1))
+        return jnp.sqrt(jnp.maximum(d2, 0.0))

@@ -32,10 +32,21 @@ def _tree_norm(t):
 
 
 def mean_valley(loss_fn, workers, *, kappa=2.0, step=0.1, max_steps=200,
-                normalize=False):
+                normalize=False, bisect_iters=25):
     """Algorithm 2. ``workers``: list of parameter pytrees (one per worker);
     ``loss_fn(params) -> scalar`` evaluates the train loss (full data or a
-    fixed large batch). Returns dict with mv, inv_mv, per-worker betas.
+    fixed large batch).
+
+    The coarse line-search only BRACKETS the kappa-contour crossing; the
+    crossing itself is refined with ``bisect_iters`` of bisection inside
+    the bracketing step, so MV is not quantized to the coarse ``step``. A
+    direction whose loss never reaches ``kappa * L_A`` within
+    ``max_steps * step`` saturates at that boundary and is flagged in the
+    returned per-worker ``hit_boundary`` list (previously this saturation
+    was silent and indistinguishable from a true crossing).
+
+    Returns dict with mv, inv_mv, per-worker betas, per-worker
+    hit_boundary flags, loss_at_avg, kappa.
     """
     if normalize:
         workers = [normalize_params(w) for w in workers]
@@ -46,20 +57,32 @@ def mean_valley(loss_fn, workers, *, kappa=2.0, step=0.1, max_steps=200,
     target = kappa * l_a
     loss_jit = jax.jit(loss_fn)
 
-    betas = []
+    betas, hit_boundary = [], []
     for w in workers:
         d = jax.tree.map(lambda a, c: a.astype(jnp.float32) - c, w, x_a)
         n = _tree_norm(d)
         if n == 0.0:
             betas.append(0.0)
+            hit_boundary.append(False)
             continue
         d = jax.tree.map(lambda a: a / n, d)
-        beta = 0.0
+        beta, hit = 0.0, True
         for _ in range(max_steps):
             beta += step
             if float(loss_jit(_axpy(x_a, d, beta))) >= target:
+                hit = False
+                lo, hi = beta - step, beta   # bracket: L(lo) < target <= L(hi)
+                for _ in range(bisect_iters):
+                    mid = 0.5 * (lo + hi)
+                    if float(loss_jit(_axpy(x_a, d, mid))) >= target:
+                        hi = mid
+                    else:
+                        lo = mid
+                beta = 0.5 * (lo + hi)
                 break
         betas.append(beta)
+        hit_boundary.append(hit)
     mv = float(np.mean(betas))
-    return {"mv": mv, "inv_mv": -mv, "betas": betas, "loss_at_avg": l_a,
+    return {"mv": mv, "inv_mv": -mv, "betas": betas,
+            "hit_boundary": hit_boundary, "loss_at_avg": l_a,
             "kappa": kappa}

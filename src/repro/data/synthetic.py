@@ -71,11 +71,16 @@ def make_lm_batch(task: TokenTask, seed: int, worker: int, step: int, batch: int
 
 
 def make_round_batch(task: TokenTask, seed: int, n_workers: int, tau: int,
-                     round_idx: int, local_batch: int, cfg=None):
-    """Stacked round input (tau, M, B, S) for the fused DPPF round step."""
+                     start_step: int, local_batch: int, cfg=None):
+    """Stacked round input (tau, M, B, S) for the fused DPPF round step.
+
+    ``start_step`` is the round's first GLOBAL step (``RoundSpec.start``
+    from the RoundClock). Seeding by global step — not ``round_idx * tau``
+    — means adaptive-tau (QSR) and remainder rounds replay the exact token
+    stream a fixed-tau run sees over the same step budget, keeping adaptive
+    runs reproducible and comparable."""
     def one(t, m):
-        return make_lm_batch(task, seed, m, round_idx * tau + t, local_batch,
-                             cfg)
+        return make_lm_batch(task, seed, m, start_step + t, local_batch, cfg)
     rows = [[one(t, m) for m in range(n_workers)] for t in range(tau)]
     stacked_rows = [jax.tree.map(lambda *xs: jnp.stack(xs), *row) for row in rows]
     return jax.tree.map(lambda *xs: jnp.stack(xs), *stacked_rows)

@@ -127,7 +127,8 @@ def build_train(arch, shape, mesh, plan, *, ddp=False, tau=4,
         st_sh = dataclasses.replace(
             state_specs,
             params=p_sh, opt={"mu": p_sh},
-            cstate={}, t=NamedSharding(mesh, P()))
+            cstate={}, t=NamedSharding(mesh, P()),
+            round=NamedSharding(mesh, P()))   # clock position: replicated
         batch_specs = specs_lib.input_specs(cfg, shape, plan, "train", M, tau)
         b_sh = mesh_lib.batch_shardings(mesh, batch_specs, plan,
                                         round_dims=True)

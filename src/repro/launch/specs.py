@@ -54,7 +54,11 @@ def _modality_specs(cfg: ModelConfig, lead: tuple):
 
 def train_batch_specs(cfg: ModelConfig, shape: InputShape, n_workers: int,
                       tau: int, *, per_step=False):
-    assert shape.global_batch % n_workers == 0, (shape, n_workers)
+    if shape.global_batch % n_workers:
+        # ValueError, not assert: user-facing dry-run path, -O safe
+        raise ValueError(
+            f"{shape.name}: global batch {shape.global_batch} not divisible "
+            f"by {n_workers} workers")
     b_local = shape.global_batch // n_workers
     lead = (n_workers, b_local) if per_step else (tau, n_workers, b_local)
     specs = {

@@ -21,7 +21,7 @@ from repro.data import TokenTask, make_lm_batch, make_round_batch
 from repro.models import build_model
 from repro.optim import make_optimizer
 from repro.train import (
-    init_train_state, make_ddp_step, make_round_step,
+    RoundClock, init_train_state, make_ddp_step, make_round_step,
     make_sharded_round_step, shard_train_state,
 )
 from repro.train.trainer import TrainState, average_params
@@ -56,6 +56,14 @@ def main(argv=None):
                          "devices (launch.mesh.make_flat_engine_mesh; "
                          "flat engine only)")
     ap.add_argument("--lam-schedule", default="increasing")
+    ap.add_argument("--tau-schedule", default="fixed",
+                    choices=["fixed", "qsr"],
+                    help="qsr = Quadratic Synchronization Rule (§7.2): "
+                         "tau_t = max(tau, floor((qsr_beta/lr_t)^2)) per "
+                         "round — fewer consensus all-reduces as the "
+                         "cosine LR decays")
+    ap.add_argument("--qsr-beta", type=float, default=0.0,
+                    help="QSR beta (required > 0 with --tau-schedule qsr)")
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
     ap.add_argument("--sam-rho", type=float, default=0.0)
     ap.add_argument("--steps", type=int, default=200)
@@ -95,17 +103,23 @@ def main(argv=None):
     task = TokenTask(vocab_size=cfg.vocab_size, seq_len=args.seq)
     dcfg = DPPFConfig(alpha=args.alpha, lam=args.lam, tau=args.tau,
                       consensus=args.consensus, engine=args.engine,
-                      overlap=args.overlap, lam_schedule=args.lam_schedule)
+                      overlap=args.overlap, lam_schedule=args.lam_schedule,
+                      tau_schedule=args.tau_schedule, qsr_beta=args.qsr_beta)
     opt = make_optimizer(args.optimizer, momentum=0.9, weight_decay=1e-3)
     key = jax.random.PRNGKey(args.seed)
+
+    # the RoundClock is the single source of truth for step/round
+    # accounting: round plan (incl. the steps % tau remainder and
+    # QSR-adaptive taus), lam_t, and LR position (DESIGN.md §Round-clock)
+    clock = RoundClock.from_config(dcfg, base_lr=args.lr,
+                                   total_steps=args.steps)
 
     t0 = time.time()
     if args.consensus == "ddp":
         p0 = model.init(key)
         state = TrainState(params=p0, opt=opt.init(p0), cstate={},
                            t=jnp.zeros((), jnp.int32))
-        step = jax.jit(make_ddp_step(model.loss, opt, base_lr=args.lr,
-                                     total_steps=args.steps,
+        step = jax.jit(make_ddp_step(model.loss, opt, clock=clock,
                                      sam_rho=args.sam_rho))
         for s in range(args.steps):
             batch = jax.tree.map(
@@ -125,35 +139,59 @@ def main(argv=None):
             stem = args.ckpt[:-4] if args.ckpt.endswith(".npz") else args.ckpt
             state_file = stem + ".state.npz"
         if state_file and os.path.exists(state_file):
-            state = load_train_state(state_file, state)
-            print(f"resumed from {state_file} at step {int(state.t)}")
+            state = load_train_state(state_file, state, clock=clock)
+            # the saved round index belongs to the plan that WROTE the
+            # checkpoint; if this run's plan differs (changed --steps /
+            # --lr / tau schedule), re-derive the position from the step
+            # counter — a silent mismatch would replay or skip data
+            import dataclasses as _dc
+            t_res, rnd = int(state.t), int(state.round)
+            if rnd >= clock.total_rounds or clock.rounds[rnd].start != t_res:
+                rnd = clock.round_of_step(t_res)   # raises if t > steps
+                if rnd < clock.total_rounds and \
+                        clock.rounds[rnd].start != t_res:
+                    raise ValueError(
+                        f"checkpoint step {t_res} is mid-round in this "
+                        f"run's plan (round {rnd} starts at "
+                        f"{clock.rounds[rnd].start}) — resume with the "
+                        "original --steps/--lr/--tau-schedule/--qsr-beta")
+                state = _dc.replace(
+                    state, round=jnp.asarray(rnd, jnp.int32))
+            print(f"resumed from {state_file} at step {t_res} "
+                  f"(round {rnd})")
         if args.sharded:
             from repro.launch.mesh import make_flat_engine_mesh
             mesh, plan = make_flat_engine_mesh(args.workers)
             print(f"sharded round on mesh {dict(mesh.shape)}")
             state = shard_train_state(state, mesh, plan)
             step = jax.jit(make_sharded_round_step(
-                model.loss, opt, dcfg, mesh=mesh, plan=plan, base_lr=args.lr,
-                total_steps=args.steps, sam_rho=args.sam_rho),
-                donate_argnums=0)
+                model.loss, opt, dcfg, mesh=mesh, plan=plan, clock=clock,
+                sam_rho=args.sam_rho), donate_argnums=0)
         else:
             # donation keeps the flat engine's (R, n) view (and the opt
             # state) in place across rounds — no per-round parameter copies
             step = jax.jit(make_round_step(model.loss, opt, dcfg,
-                                           base_lr=args.lr,
-                                           total_steps=args.steps,
+                                           clock=clock,
                                            sam_rho=args.sam_rho),
                            donate_argnums=0)
-        rounds = max(args.steps // args.tau, 1)
-        for r in range(int(state.t) // args.tau, rounds):
-            batch = make_round_batch(task, args.seed, args.workers, args.tau,
-                                     r, args.batch, cfg)
+        # iterate the clock's round plan: every step runs (the remainder
+        # round is part of the plan, no longer dropped), batches are cut to
+        # each round's tau and seeded by its global start step, and a QSR
+        # tau change simply retraces under jit (the shape-keyed jit cache
+        # IS the per-tau compiled-step cache)
+        for spec in clock.rounds[int(state.round):]:
+            batch = make_round_batch(task, args.seed, args.workers, spec.tau,
+                                     spec.start, args.batch, cfg)
             state, m = step(state, batch)
-            if r % args.log_every == 0:
-                print(f"round {r:4d} (step {int(state.t):5d}) "
+            if spec.index % args.log_every == 0:
+                print(f"round {spec.index:4d} (step {int(state.t):5d} "
+                      f"tau {spec.tau:3d}) "
                       f"loss {float(m['train_loss']):.4f} "
                       f"consensus_dist {float(m['consensus_dist']):.3f} "
                       f"lam_t {float(m.get('lam_t', 0)):.3f}")
+        print(f"comm rounds {clock.total_rounds} "
+              f"(fixed tau={args.tau} would take {clock.fixed_rounds}; "
+              f"all-reduces saved {clock.fixed_rounds - clock.total_rounds})")
         if state_file:
             save_train_state(state_file, state)
             print(f"train-state resume point -> {state_file}")

@@ -1,3 +1,3 @@
-from repro.serving.engine import generate, make_serve_step
+from repro.serving.engine import decode_key, generate, make_serve_step
 
-__all__ = ["generate", "make_serve_step"]
+__all__ = ["decode_key", "generate", "make_serve_step"]

@@ -21,10 +21,23 @@ def make_serve_step(model: ModelAPI, window: int = 0):
     return serve_step
 
 
+def decode_key(key, i: int):
+    """Sampling key for generated token ``i``: token 0 consumes the
+    caller's key directly, tokens ``i >= 1`` fold the token index in.
+    ``fold_in(k, i) != k``, so the first draw and the chain never collide —
+    this helper IS that contract (tested in tests/test_clock.py). Host
+    ``i`` only; the scan body inlines the ``i >= 1`` branch."""
+    if i == 0:
+        return key
+    return jax.random.fold_in(key, i)
+
+
 def generate(model: ModelAPI, params, batch, *, max_new_tokens: int,
              buf_len: int, window: int = 0, greedy: bool = True, key=None):
     """Prefill the prompt then decode ``max_new_tokens`` greedily (or
-    sampled). Returns (tokens (B, max_new_tokens), final logits)."""
+    sampled). ``max_new_tokens == 1`` is a plain prefill-then-pick (the
+    decode scan runs zero times). Returns (tokens (B, max_new_tokens),
+    final logits)."""
     prompt = batch["tokens"]
     B, S = prompt.shape
     prefix = 0
@@ -40,13 +53,13 @@ def generate(model: ModelAPI, params, batch, *, max_new_tokens: int,
         return jax.random.categorical(k, lg).astype(jnp.int32)
 
     k0 = key if key is not None else jax.random.PRNGKey(0)
-    tok0 = pick(logits, k0)
+    tok0 = pick(logits, decode_key(k0, 0))
 
     def body(carry, i):
         tok, states = carry
         lg, states = model.decode_step(params, states, tok[:, None],
                                        start + i, window=window)
-        nxt = pick(lg, jax.random.fold_in(k0, i))
+        nxt = pick(lg, jax.random.fold_in(k0, i))   # decode_key, i >= 1
         return (nxt, states), tok
 
     (last, _), toks = jax.lax.scan(body, (tok0, states),

@@ -1,0 +1,198 @@
+"""RoundClock: the single source of truth for step/round accounting.
+
+The paper's communication-efficiency axis is the round clock — how often
+workers synchronize (tau) and how hard they push (lam_t, §C.2), with §7.2
+adapting tau to the LR via the Quadratic Synchronization Rule (Gu et al.
+2024). Before this module, each callsite kept its own fragment of that
+clock and each fragment was subtly wrong:
+
+* the round builders derived ``round_idx = t // tau`` AFTER the scan had
+  advanced ``t``, so ``lam_schedule`` never evaluated at round 0 and the
+  whole "increasing" trajectory (the paper's main-results default) ran one
+  round early;
+* ``launch/train.py`` iterated ``steps // tau`` rounds, silently dropping
+  the ``steps % tau`` remainder;
+* ``schedules.qsr_tau`` was dead code reachable only from its unit test.
+
+The ``RoundClock`` precomputes the ENTIRE round plan host-side at
+construction — a tuple of ``RoundSpec(index, start, tau)`` covering every
+one of ``total_steps`` steps (the final round absorbs the remainder; with
+``tau_schedule="qsr"`` each round's tau comes from the cosine LR at the
+round's first step) — and owns the two traced-compatible schedule reads:
+
+* ``lam_at(round_idx)``: lam_t for the round ABOUT TO RUN, evaluated over
+  ``total_rounds - 1`` so round 0 sees ``lam_schedule(·, 0, ·)`` (zero for
+  "increasing") and the final round sees the full ``lam``;
+* ``lr_at(t)``: the cosine LR at global step ``t``.
+
+Drivers (``launch/train.py``, ``benchmarks/common.run_distributed``)
+iterate ``clock.rounds`` and cut each round's batch to ``spec.tau`` steps
+seeded by ``spec.start`` (the GLOBAL step — adaptive runs replay the same
+data stream as fixed-tau runs over the same step budget). A tau change
+between rounds changes the batch's leading dim, so ``jax.jit``'s
+shape-keyed cache IS the per-tau compiled-step cache — no extra machinery.
+The clock position (``TrainState.round``) persists through
+``checkpoint/io.py`` save/resume. See DESIGN.md §Round-clock.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Tuple
+
+from repro.core.schedules import cosine_lr, lam_schedule, qsr_tau
+
+TAU_SCHEDULES = ("fixed", "qsr")
+
+
+@dataclass(frozen=True)
+class RoundSpec:
+    """One communication round of the plan (host ints, known up front)."""
+    index: int      # 0-based round index
+    start: int      # GLOBAL step of the round's first local step
+    tau: int        # local steps this round (>= 1; the last round may be
+                    # shorter — the remainder is run, never dropped)
+
+    @property
+    def stop(self) -> int:
+        """Global step after the round (== next round's ``start``)."""
+        return self.start + self.tau
+
+
+def _host_cosine_lr(base_lr: float, t: int, total: int, warmup: int) -> float:
+    """Pure-python twin of ``schedules.cosine_lr`` for the host-side round
+    plan (no jnp dispatch per round; the traced reads go through
+    ``lr_at``)."""
+    if t < warmup:
+        return base_lr * t / max(warmup, 1)
+    frac = min(max((t - warmup) / max(total - warmup, 1), 0.0), 1.0)
+    return base_lr / 2.0 * (1.0 + math.cos(frac * math.pi))
+
+
+@dataclass(frozen=True)
+class RoundClock:
+    """Step/round accounting for one training run (hashable, host-side).
+
+    ``rounds`` is derived lazily (cached on first read — DDP drivers only
+    touch ``lr_at`` and never pay for a plan) and covers exactly
+    ``total_steps`` steps. ``lam_at``/``lr_at`` accept traced scalars and
+    are the ONLY schedule reads the round builders perform.
+    """
+    total_steps: int
+    tau: int                         # base communication period
+    base_lr: float = 0.0
+    warmup: int = 0
+    lam: float = 0.0
+    lam_kind: str = "increasing"     # fixed | increasing | decreasing (§C.2)
+    tau_schedule: str = "fixed"      # fixed | qsr (§7.2)
+    qsr_beta: float = 0.0            # QSR: tau_t = max(tau, floor((beta/eta)^2))
+
+    def __post_init__(self):
+        # ValueError, not assert: these guard user-facing config plumbing
+        # and must survive ``python -O``
+        if self.total_steps < 1:
+            raise ValueError(f"total_steps must be >= 1, got {self.total_steps}")
+        if self.tau < 1:
+            raise ValueError(f"tau must be >= 1, got {self.tau}")
+        if self.tau_schedule not in TAU_SCHEDULES:
+            raise ValueError(f"unknown tau schedule {self.tau_schedule!r} "
+                             f"(expected one of {TAU_SCHEDULES})")
+        if self.tau_schedule == "qsr":
+            if self.qsr_beta <= 0:
+                raise ValueError("tau_schedule='qsr' needs qsr_beta > 0")
+            if self.base_lr <= 0:
+                raise ValueError("tau_schedule='qsr' adapts tau to the "
+                                 "cosine LR and needs base_lr > 0")
+
+    @classmethod
+    def from_config(cls, dcfg, *, base_lr: float, total_steps: int,
+                    warmup: int = 0) -> "RoundClock":
+        """Build the clock from a ``DPPFConfig`` + the LR triple. A config
+        with ``qsr_beta > 0`` opts into QSR even if ``tau_schedule`` was
+        left at "fixed" (the pre-clock opt-in convention)."""
+        tau_schedule = getattr(dcfg, "tau_schedule", "fixed")
+        if tau_schedule == "fixed" and dcfg.qsr_beta > 0:
+            tau_schedule = "qsr"
+        return cls(total_steps=total_steps, tau=dcfg.tau, base_lr=base_lr,
+                   warmup=warmup, lam=dcfg.lam, lam_kind=dcfg.lam_schedule,
+                   tau_schedule=tau_schedule, qsr_beta=dcfg.qsr_beta)
+
+    # -- round plan ---------------------------------------------------------
+
+    @cached_property
+    def rounds(self) -> Tuple[RoundSpec, ...]:
+        # cached_property writes the result straight into __dict__, which a
+        # frozen dataclass permits; the plan is a pure function of the
+        # (compared, hashed) config fields, so equality/hash are unaffected
+        rounds, t = [], 0
+        while t < self.total_steps:
+            if self.tau_schedule == "qsr":
+                eta = _host_cosine_lr(self.base_lr, t, self.total_steps,
+                                      self.warmup)
+                tau_t = qsr_tau(eta, self.tau, self.qsr_beta)
+            else:
+                tau_t = self.tau
+            tau_t = min(tau_t, self.total_steps - t)   # never drop remainder
+            rounds.append(RoundSpec(index=len(rounds), start=t, tau=tau_t))
+            t += tau_t
+        return tuple(rounds)
+
+    @property
+    def total_rounds(self) -> int:
+        return len(self.rounds)
+
+    @property
+    def fixed_rounds(self) -> int:
+        """Rounds (= consensus all-reduces) a fixed-tau clock would pay for
+        the same step budget — the baseline for QSR's savings."""
+        return math.ceil(self.total_steps / self.tau)
+
+    def round_of_step(self, t: int) -> int:
+        """Round index containing global step ``t`` (== ``total_rounds``
+        when ``t == total_steps``, i.e. training finished). Used by resume
+        paths to recover the clock position from a step counter alone."""
+        if t < 0 or t > self.total_steps:
+            raise ValueError(f"step {t} outside [0, {self.total_steps}]")
+        for spec in self.rounds:
+            if t < spec.stop:
+                return spec.index
+        return self.total_rounds
+
+    def taus(self) -> Tuple[int, ...]:
+        return tuple(spec.tau for spec in self.rounds)
+
+    # -- traced-compatible schedule reads ------------------------------------
+
+    def lam_at(self, round_idx):
+        """Push strength for round ``round_idx`` (the round ABOUT TO RUN —
+        evaluate BEFORE the scan advances t). The denominator is
+        ``total_rounds - 1`` so the trajectory spans both endpoints: round
+        0 sees ``lam_schedule(·, 0, ·)`` and the final round sees the full
+        ``lam``. A single-round plan has no trajectory to span — its one
+        round is both endpoints, and it applies the FULL lam (a zero-push
+        round would silently disable the paper's push term). Accepts a
+        traced scalar."""
+        if self.total_rounds == 1:
+            return lam_schedule("fixed", self.lam, round_idx, 1)
+        return lam_schedule(self.lam_kind, self.lam, round_idx,
+                            self.total_rounds - 1)
+
+    def lr_at(self, t):
+        """Cosine LR at global step ``t`` (traced ok)."""
+        return cosine_lr(self.base_lr, t, self.total_steps, self.warmup)
+
+    def describe(self) -> dict:
+        """Machine-readable summary (benchmarks/BENCH_roundclock.json)."""
+        taus = self.taus()
+        return {
+            "total_steps": self.total_steps,
+            "tau_base": self.tau,
+            "tau_schedule": self.tau_schedule,
+            "qsr_beta": self.qsr_beta,
+            "rounds": self.total_rounds,
+            "fixed_rounds": self.fixed_rounds,
+            "allreduces_saved": self.fixed_rounds - self.total_rounds,
+            "tau_min": min(taus),
+            "tau_max": max(taus),
+        }

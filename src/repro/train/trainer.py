@@ -27,6 +27,15 @@ Two round-level extensions on top of the flat engine:
   from the PREVIOUS round's snapshot (carried in ``TrainState.snap``), so
   the consensus collectives have no data dependence on the current round's
   local steps and the scheduler hides them behind tau steps of compute.
+
+Step/round accounting is owned by ``repro.train.clock.RoundClock``
+(DESIGN.md §Round-clock): every builder reads lam_t via
+``clock.lam_at(state.round)`` — the index of the round ABOUT TO RUN, so
+round 0 evaluates ``lam_schedule(·, 0, ·)`` and the final round the full
+lam — and the LR via ``clock.lr_at(t)``. The builders are tau-oblivious:
+``t`` advances by the batch's leading (scan) dim and ``round`` by one, so
+ONE builder serves fixed, remainder, and QSR-adaptive round lengths
+(``jax.jit``'s shape-keyed cache is the per-tau compile cache).
 """
 from __future__ import annotations
 
@@ -41,8 +50,8 @@ import jax.numpy as jnp
 from repro.configs.base import DPPFConfig
 from repro.core import consensus
 from repro.core.engine import ConsensusEngine, ShardedLayout
-from repro.core.schedules import cosine_lr, lam_schedule
 from repro.optim import Optimizer, sam_gradient
+from repro.train.clock import RoundClock
 
 
 @dataclass
@@ -54,14 +63,35 @@ class TrainState:
     t: jnp.ndarray       # local-step counter (scalar int32)
     snap: Any = None     # staleness-1 carry: {"x": (R, n) snapshot,
                          # "losses": (M,), "gns": (M,)} (flat engine only)
+    round: Any = None    # round counter (scalar int32) — the clock position;
+                         # None on hand-built/DDP states (builders fall back
+                         # to the pre-scan ``t // tau``)
     engine: Any = None   # ConsensusEngine (static metadata) or None
 
 
 # ``engine`` is hashable static metadata: jit recompiles if the layout
 # changes, and donation/vmap only ever see the array fields.
 jax.tree_util.register_dataclass(
-    TrainState, data_fields=("params", "opt", "cstate", "t", "snap"),
+    TrainState, data_fields=("params", "opt", "cstate", "t", "snap", "round"),
     meta_fields=("engine",))
+
+
+def _round_index(state: TrainState, dcfg: DPPFConfig):
+    """The index of the round about to run. States built by
+    ``init_train_state`` carry the clock position; legacy hand-built states
+    fall back to the PRE-scan ``t // tau`` (correct for fixed tau — the
+    historical post-scan ``t // tau`` was the off-by-one)."""
+    if state.round is not None:
+        return state.round
+    return state.t // max(dcfg.tau, 1)
+
+
+def _legacy_clock(dcfg, base_lr, total_steps, warmup, who):
+    if base_lr is None or total_steps is None:
+        raise ValueError(f"{who} needs a RoundClock (clock=...) or the "
+                         "legacy base_lr/total_steps pair")
+    return RoundClock.from_config(dcfg, base_lr=base_lr,
+                                  total_steps=total_steps, warmup=warmup)
 
 
 def _grad_norm(grads):
@@ -70,7 +100,7 @@ def _grad_norm(grads):
 
 
 def _scan_local_steps(loss, opt: Optimizer, p0, opt_st, t0, batch, *,
-                      base_lr, total_steps, warmup, sam_rho):
+                      clock: RoundClock, sam_rho):
     """The tau purely-local steps shared by every round builder:
     ``lax.scan`` over the batch's leading (tau) dim, vmap over the worker
     dim of ``p0``/``opt_st``/``batch[:, m]``. Returns
@@ -80,7 +110,7 @@ def _scan_local_steps(loss, opt: Optimizer, p0, opt_st, t0, batch, *,
             (loss_v, _), g = sam_gradient(loss, p, b, sam_rho)
         else:
             (loss_v, _), g = jax.value_and_grad(loss, has_aux=True)(p, b)
-        lr = cosine_lr(base_lr, t, total_steps, warmup)
+        lr = clock.lr_at(t)
         gn = _grad_norm(g)
         p, o = opt.step(p, g, o, lr)
         return p, o, loss_v, gn
@@ -141,20 +171,28 @@ def init_train_state(loss_params_init, opt: Optimizer, dcfg: DPPFConfig,
         opt_state = jax.vmap(opt.init)(params)
         cstate = consensus.init_state(dcfg.consensus, params)
     return TrainState(params=params, opt=opt_state, cstate=cstate,
-                      t=jnp.zeros((), jnp.int32), snap=snap, engine=engine)
+                      t=jnp.zeros((), jnp.int32), snap=snap,
+                      round=jnp.zeros((), jnp.int32), engine=engine)
 
 
 def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
-                    base_lr: float, total_steps: int, warmup: int = 0,
-                    sam_rho: float = 0.0, total_rounds: Optional[int] = None):
+                    clock: Optional[RoundClock] = None,
+                    base_lr: Optional[float] = None,
+                    total_steps: Optional[int] = None, warmup: int = 0,
+                    sam_rho: float = 0.0):
     """Build the fused DPPF round: scan(tau local steps) + consensus.
 
-    Input batch pytree has leading dims (tau, M, ...). Returns
-    round_step(state, batch) -> (state, metrics). jit/shard at callsite
-    (``donate_argnums=0`` recommended — required for in-place flat-view
-    reuse when the state carries a ConsensusEngine).
+    Input batch pytree has leading dims (tau_r, M, ...) where tau_r is THIS
+    round's length (``RoundSpec.tau`` — fixed, remainder, or QSR-adaptive;
+    a new length just retraces under jit). Schedules come from ``clock``
+    (built from the legacy ``base_lr``/``total_steps`` pair when omitted).
+    Returns round_step(state, batch) -> (state, metrics). jit/shard at
+    callsite (``donate_argnums=0`` recommended — required for in-place
+    flat-view reuse when the state carries a ConsensusEngine).
     """
-    total_rounds = total_rounds or max(total_steps // max(dcfg.tau, 1), 1)
+    if clock is None:
+        clock = _legacy_clock(dcfg, base_lr, total_steps, warmup,
+                              "make_round_step")
     overlap = getattr(dcfg, "overlap", "none") == "staleness1"
 
     def round_step(state: TrainState, batch):
@@ -171,14 +209,16 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             p0 = engine.workers(state.params)
 
         params, opt_st, t, losses, gns = _scan_local_steps(
-            loss, opt, p0, state.opt, state.t, batch, base_lr=base_lr,
-            total_steps=total_steps, warmup=warmup, sam_rho=sam_rho)
+            loss, opt, p0, state.opt, state.t, batch, clock=clock,
+            sam_rho=sam_rho)
         if engine is not None:
             params = engine.with_workers(state.params, params)
 
-        round_idx = t // max(dcfg.tau, 1)
-        lam_t = lam_schedule(dcfg.lam_schedule, dcfg.lam, round_idx,
-                             total_rounds)
+        # the round ABOUT TO apply its consensus — read the lam schedule at
+        # the clock position, not the post-scan ``t // tau`` (the old
+        # off-by-one that skipped round 0 and shifted the whole trajectory)
+        round_idx = _round_index(state, dcfg)
+        lam_t = clock.lam_at(round_idx)
         if overlap:
             # staleness-1: consensus of the PREVIOUS round's snapshot; its
             # collectives have no data dependence on this round's scan, so
@@ -204,7 +244,9 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         metrics["train_loss"] = losses.mean()
         metrics["lam_t"] = lam_t
         new_state = TrainState(params=params, opt=opt_st, cstate=cstate, t=t,
-                               snap=new_snap, engine=engine)
+                               snap=new_snap,
+                               round=jnp.asarray(round_idx + 1, jnp.int32),
+                               engine=engine)
         return new_state, metrics
 
     return round_step
@@ -227,9 +269,10 @@ def _lin_index(axes, sizes):
 
 
 def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
-                            mesh, plan, base_lr: float, total_steps: int,
-                            warmup: int = 0, sam_rho: float = 0.0,
-                            total_rounds: Optional[int] = None):
+                            mesh, plan, clock: Optional[RoundClock] = None,
+                            base_lr: Optional[float] = None,
+                            total_steps: Optional[int] = None,
+                            warmup: int = 0, sam_rho: float = 0.0):
     """Build the DPPF round lowered under ``jax.shard_map`` (flat engine
     only): worker rows of the (R, n) view shard over ``plan.worker_axes``,
     columns over ``plan.fsdp_axes + plan.model_axes``.
@@ -253,7 +296,9 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
 
-    total_rounds = total_rounds or max(total_steps // max(dcfg.tau, 1), 1)
+    if clock is None:
+        clock = _legacy_clock(dcfg, base_lr, total_steps, warmup,
+                              "make_sharded_round_step")
     overlap = getattr(dcfg, "overlap", "none") == "staleness1"
     row_axes = tuple(plan.worker_axes)
     col_axes = tuple(plan.fsdp_axes) + tuple(plan.model_axes)
@@ -287,7 +332,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             return P(*([None] * offset + [entry] + [None] * (nd - offset - 1))) \
                 if nd > offset else P()
 
-        def mapped(w_loc, opt_loc, t0, b_loc, *rest):
+        def mapped(w_loc, opt_loc, t0, rnd0, b_loc, *rest):
             rest = list(rest)
             aux_loc = rest.pop(0) if aux else None
             snap_x, snap_l, snap_g = (rest if overlap else (None, None, None))
@@ -297,8 +342,8 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 if eff_cols else w_loc
             loss = lambda row, b: loss_fn(engine.unflatten_row(row), b)
             params, opt_st, t, losses, gns = _scan_local_steps(
-                loss, opt, w_full, opt_loc, t0, b_loc, base_lr=base_lr,
-                total_steps=total_steps, warmup=warmup, sam_rho=sam_rho)
+                loss, opt, w_full, opt_loc, t0, b_loc, clock=clock,
+                sam_rho=sam_rho)
 
             # round boundary: back to own columns, gather worker rows
             if eff_cols:
@@ -316,9 +361,9 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 q_rows, l_last, g_last = q_loc, losses[-1], gns[-1]
             X = jnp.concatenate([q_rows, aux_loc], axis=0) if aux else q_rows
 
-            round_idx = t // max(dcfg.tau, 1)
-            lam_t = lam_schedule(dcfg.lam_schedule, dcfg.lam, round_idx,
-                                 total_rounds)
+            # clock position of the round about to mix (pre-scan index —
+            # same off-by-one fix as make_round_step)
+            lam_t = clock.lam_at(rnd0)
             if overlap:
                 c_out, cstate, metrics = consensus.apply_round(
                     snap_x, dcfg, lam_t, state.cstate,
@@ -345,7 +390,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             metrics = dict(metrics)
             metrics["train_loss"] = train_loss
             metrics["lam_t"] = lam_t
-            outs = [new_w, opt_st, t, metrics]
+            outs = [new_w, opt_st, t, rnd0 + 1, metrics]
             if aux:
                 outs.append(newX[M:])
             if overlap:
@@ -358,9 +403,11 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         metric_out = {k: P() for k in ("consensus_dist", "pre_dist",
                                        "pull_force", "push_force",
                                        "train_loss", "lam_t")}
-        args = [engine.workers(state.params), state.opt, state.t, batch]
-        in_specs = [P(row_e, col_e), opt_in, P(), batch_in]
-        out_specs = [P(row_e, col_e), opt_in, P(), metric_out]
+        rnd0 = jnp.asarray(_round_index(state, dcfg), jnp.int32)
+        args = [engine.workers(state.params), state.opt, state.t, rnd0,
+                batch]
+        in_specs = [P(row_e, col_e), opt_in, P(), P(), batch_in]
+        out_specs = [P(row_e, col_e), opt_in, P(), P(), metric_out]
         if aux:
             args.append(state.params[M:])
             in_specs.append(P(None, col_e))
@@ -376,15 +423,15 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         res = list(shard_map(
             mapped, mesh=mesh, in_specs=tuple(in_specs),
             out_specs=tuple(out_specs), check_rep=False)(*args))
-        new_w, opt_st, t, metrics = res[:4]
-        rest = res[4:]
+        new_w, opt_st, t, rnd, metrics = res[:5]
+        rest = res[5:]
         params = jnp.concatenate([new_w, rest.pop(0)], axis=0) if aux \
             else new_w
         snap = {"x": rest[0], "losses": rest[1], "gns": rest[2]} \
             if overlap else state.snap
         new_state = TrainState(params=params, opt=opt_st,
                                cstate=state.cstate, t=t, snap=snap,
-                               engine=engine)
+                               round=rnd, engine=engine)
         return new_state, metrics
 
     return round_step
@@ -418,16 +465,29 @@ def shard_train_state(state: TrainState, mesh, plan):
         snap = {"x": put(snap["x"], P(None, col_e)),
                 "losses": put(snap["losses"], P()),
                 "gns": put(snap["gns"], P())}
+    rnd = put(state.round, P()) if state.round is not None else None
     return TrainState(params=params, opt=jax.tree.map(opt_put, state.opt),
                       cstate=state.cstate, t=put(state.t, P()), snap=snap,
-                      engine=state.engine)
+                      round=rnd, engine=state.engine)
 
 
-def make_ddp_step(loss_fn, opt: Optimizer, *, base_lr: float,
-                  total_steps: int, warmup: int = 0, sam_rho: float = 0.0):
+def make_ddp_step(loss_fn, opt: Optimizer, *,
+                  clock: Optional[RoundClock] = None,
+                  base_lr: Optional[float] = None,
+                  total_steps: Optional[int] = None, warmup: int = 0,
+                  sam_rho: float = 0.0):
     """DDP baseline: one replica; per-worker micro-grads are averaged every
     step (lowers to the per-step all-reduce on the mesh). Batch leading dim
-    is M (the worker/data axis)."""
+    is M (the worker/data axis). The LR position comes from the same
+    ``RoundClock`` the round builders use (tau is irrelevant here — DDP is
+    the tau=1-per-step clock)."""
+    if clock is None:
+        if base_lr is None or total_steps is None:
+            raise ValueError("make_ddp_step needs a RoundClock (clock=...) "
+                             "or the legacy base_lr/total_steps pair")
+        clock = RoundClock(total_steps=total_steps, tau=1, base_lr=base_lr,
+                           warmup=warmup)
+
     def step(state: TrainState, batch):
         def per_worker(b):
             if sam_rho > 0:
@@ -440,7 +500,7 @@ def make_ddp_step(loss_fn, opt: Optimizer, *, base_lr: float,
         losses, grads = jax.vmap(per_worker)(batch)
         g = jax.tree.map(lambda a: jnp.mean(a.astype(jnp.float32), axis=0),
                          grads)
-        lr = cosine_lr(base_lr, state.t, total_steps, warmup)
+        lr = clock.lr_at(state.t)
         params, opt_st = opt.step(state.params, g, state.opt, lr)
         new_state = TrainState(params=params, opt=opt_st, cstate=state.cstate,
                                t=state.t + 1)

@@ -1,0 +1,87 @@
+"""``python -O`` smoke for the de-asserted validation paths.
+
+Run as a SCRIPT under ``python -O`` (the CI leg): with asserts stripped,
+every user-facing check must still raise a real exception. Uses explicit
+raises (not ``assert``) to report, since asserts are off by construction.
+
+    PYTHONPATH=src python -O tests/optcheck.py
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+
+def expect_raises(exc, fn, label):
+    try:
+        fn()
+    except exc:
+        print(f"ok: {label}")
+        return
+    raise SystemExit(f"FAIL: {label} did not raise {exc.__name__} "
+                     f"(python -O stripped the check?)")
+
+
+def main():
+    if __debug__:
+        print("warning: running with asserts ON — use python -O",
+              file=sys.stderr)
+
+    from repro.configs.base import DPPFConfig
+    expect_raises(ValueError, lambda: DPPFConfig(engine="nope"),
+                  "DPPFConfig unknown engine")
+    expect_raises(ValueError, lambda: DPPFConfig(tau_schedule="nope"),
+                  "DPPFConfig unknown tau schedule")
+    expect_raises(ValueError, lambda: DPPFConfig(tau_schedule="qsr"),
+                  "DPPFConfig qsr without beta")
+
+    from repro.train import RoundClock
+    expect_raises(ValueError,
+                  lambda: RoundClock(total_steps=8, tau=4,
+                                     tau_schedule="qsr", qsr_beta=0.0),
+                  "RoundClock qsr without beta")
+
+    from repro.core import consensus
+    import jax.numpy as jnp
+    stacked = {"w": jnp.zeros((2, 3))}
+    expect_raises(ValueError,
+                  lambda: consensus.consensus_target("lsgd", stacked, {}),
+                  "lsgd without losses (tree)")
+    expect_raises(ValueError,
+                  lambda: consensus.consensus_target("mgrawa", stacked, {}),
+                  "mgrawa without grad norms (tree)")
+    from repro.core.engine import ConsensusEngine
+    eng = ConsensusEngine.from_stacked(stacked, method="lsgd")
+    flat = eng.flatten(stacked)
+    dcfg = DPPFConfig(consensus="lsgd", engine="flat")
+    expect_raises(ValueError,
+                  lambda: consensus.apply_round(flat, dcfg, 0.1, {},
+                                                engine=eng),
+                  "lsgd without losses (flat)")
+
+    from repro.launch.mesh import make_hierarchical_mesh
+    expect_raises(ValueError, lambda: make_hierarchical_mesh(7, 5, 3),
+                  "hierarchical mesh with impossible factors")
+
+    from repro.launch.specs import train_batch_specs
+    from repro.configs.base import InputShape
+    from repro.configs import ARCHS
+    shape = InputShape("odd", 8, 7, "train")
+    expect_raises(ValueError,
+                  lambda: train_batch_specs(ARCHS["yi-6b"], shape, 4, 2),
+                  "train batch not divisible by workers")
+
+    import tempfile, os
+    from repro.checkpoint import load_pytree, save_pytree
+    with tempfile.TemporaryDirectory() as d:
+        p = os.path.join(d, "x.npz")
+        save_pytree(p, {"w": np.zeros((3, 3))})
+        expect_raises(ValueError,
+                      lambda: load_pytree(p, {"w": np.zeros((2, 2))}),
+                      "checkpoint shape mismatch")
+    print("python -O validation smoke: all checks raise")
+
+
+if __name__ == "__main__":
+    main()

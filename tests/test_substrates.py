@@ -157,7 +157,8 @@ def test_generate_greedy_learns_recurrence():
     step = jax.jit(make_round_step(model.loss, opt, dcfg, base_lr=0.3,
                                    total_steps=100))
     for r in range(25):
-        state, _ = step(state, make_round_batch(task, 0, 2, 4, r, 4, cfg))
+        # make_round_batch seeds by GLOBAL step (RoundSpec.start)
+        state, _ = step(state, make_round_batch(task, 0, 2, 4, 4 * r, 4, cfg))
     avg = average_params(state)
     prompt = task.sample(jax.random.PRNGKey(5), 2)
     toks, _ = generate(model, avg, {"tokens": prompt}, max_new_tokens=6,

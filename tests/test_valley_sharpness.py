@@ -36,6 +36,37 @@ def test_mean_valley_exact_on_isotropic_quadratic():
     assert res["inv_mv"] == -res["mv"]
 
 
+def test_mean_valley_bisection_not_quantized_to_coarse_step():
+    """With a deliberately coarse line-search step the bisection pass must
+    still pin the kappa-contour crossing to ~1e-4, not to the step grid."""
+    c = 0.5
+    loss = quad_loss_factory([c] * 8)
+    # symmetric pair -> x_A = 0 exactly, so the kappa=2 contour sits at
+    # beta = sqrt(2/c) analytically (no average-offset correction)
+    workers = [{"x": jnp.eye(8)[0] * 0.3}, {"x": -jnp.eye(8)[0] * 0.3}]
+    res = mean_valley(loss, workers, kappa=2.0, step=0.5, max_steps=20)
+    expect = float(np.sqrt(2.0 / c))
+    assert abs(res["mv"] - expect) < 1e-3         # << the 0.5 coarse step
+    assert res["hit_boundary"] == [False, False]
+
+
+def test_mean_valley_flags_boundary_saturation():
+    """A bounded loss never reaches kappa * L_A: previously MV silently
+    saturated at max_steps * step; now each saturated direction is
+    flagged."""
+    def flat_loss(params):
+        return 1.0 + 0.0 * jnp.sum(params["x"])   # constant: never crosses
+    workers = [{"x": jnp.eye(4)[i]} for i in range(2)]
+    res = mean_valley(flat_loss, workers, kappa=2.0, step=0.1, max_steps=30)
+    assert res["hit_boundary"] == [True, True]
+    assert res["mv"] == pytest.approx(30 * 0.1, rel=1e-6)
+    # a zero-direction worker (sitting AT the average) is not a saturation
+    res0 = mean_valley(flat_loss, [{"x": jnp.zeros(4)}, {"x": jnp.zeros(4)}],
+                       kappa=2.0, step=0.1, max_steps=5)
+    assert res0["hit_boundary"] == [False, False]
+    assert res0["mv"] == 0.0
+
+
 def test_mean_valley_orders_curvatures():
     """Wider valley (smaller curvature) => larger MV => smaller Inv. MV."""
     flat = quad_loss_factory([0.1] * 6)
