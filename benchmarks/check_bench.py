@@ -1,0 +1,136 @@
+"""Compare a freshly generated ``BENCH_roundclock.json`` against the
+committed baseline (ROADMAP bench-tracking item).
+
+Two classes of fields:
+
+* **structural** — round counts, taus, the full round plan, all-reduce
+  savings: pure functions of the clock config, identical on every host.
+  Any mismatch is a real behavior change and FAILS the check (commit the
+  regenerated file if the change is intended).
+* **timing** — ``wall_s``/``us_*``/``speedup`` numbers: host-relative, so
+  they are REPORTED as deltas (and surfaced in the CI job summary via
+  ``$GITHUB_STEP_SUMMARY``) but never fail the check.
+
+CI usage (the microbench smoke step overwrites the repo-root file, so the
+baseline is stashed first):
+
+    cp BENCH_roundclock.json /tmp/bench_baseline.json
+    PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python benchmarks/microbench.py --smoke
+    python benchmarks/check_bench.py --baseline /tmp/bench_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+TIMING_KEYS = ("wall_s", "speedup", "flat_vs_hier")
+TIMING_PREFIXES = ("us_",)
+# environment fields: allowed to differ, reported only
+INFO_KEYS = ("backend",)
+
+
+def _is_timing(key: str) -> bool:
+    return key in TIMING_KEYS or any(key.startswith(p)
+                                     for p in TIMING_PREFIXES)
+
+
+def _walk(base, fresh, path, *, errors, timing, info):
+    if isinstance(base, dict) and isinstance(fresh, dict):
+        for k in sorted(set(base) | set(fresh)):
+            p = f"{path}.{k}" if path else k
+            if k not in base:
+                errors.append(f"{p}: new field (regenerate the committed "
+                              f"baseline): {fresh[k]!r}")
+            elif k not in fresh:
+                errors.append(f"{p}: missing from fresh run (was "
+                              f"{base[k]!r})")
+            elif _is_timing(k):
+                timing.append((p, base[k], fresh[k]))
+            elif k in INFO_KEYS:
+                if base[k] != fresh[k]:
+                    info.append((p, base[k], fresh[k]))
+            else:
+                _walk(base[k], fresh[k], p, errors=errors, timing=timing,
+                      info=info)
+        return
+    if isinstance(base, list) and isinstance(fresh, list):
+        if len(base) != len(fresh):
+            errors.append(f"{path}: length {len(base)} -> {len(fresh)}")
+            return
+        for i, (b, f) in enumerate(zip(base, fresh)):
+            _walk(b, f, f"{path}[{i}]", errors=errors, timing=timing,
+                  info=info)
+        return
+    if isinstance(base, float) or isinstance(fresh, float):
+        # floats in structural fields (lam/lr plan columns) are rounded to
+        # 6 digits at the source; the 1.5e-6 threshold gives the last
+        # digit's jitter headroom over IEEE representation error (a strict
+        # 1e-6 would flag abs(0.005463 - 0.005462) ~ 1.0000000000001e-06)
+        try:
+            if abs(float(base) - float(fresh)) > 1.5e-6:
+                errors.append(f"{path}: {base} -> {fresh}")
+        except (TypeError, ValueError):
+            errors.append(f"{path}: {base!r} -> {fresh!r}")
+        return
+    if base != fresh:
+        errors.append(f"{path}: {base!r} -> {fresh!r}")
+
+
+def compare(base: dict, fresh: dict):
+    errors, timing, info = [], [], []
+    _walk(base, fresh, "", errors=errors, timing=timing, info=info)
+    return errors, timing, info
+
+
+def render_summary(errors, timing, info) -> str:
+    lines = ["## BENCH_roundclock.json vs committed baseline", ""]
+    if errors:
+        lines += ["**STRUCTURAL DRIFT (check failed)** — regenerate and "
+                  "commit the baseline if intended:", ""]
+        lines += [f"- `{e}`" for e in errors]
+        lines.append("")
+    else:
+        lines.append("Structural fields match the committed baseline.")
+        lines.append("")
+    if timing:
+        lines += ["| timing field | baseline | this run | delta |",
+                  "|---|---|---|---|"]
+        for p, b, f in timing:
+            try:
+                d = f"{(float(f) - float(b)) / max(abs(float(b)), 1e-12):+.0%}"
+            except (TypeError, ValueError):
+                d = "n/a"
+            lines.append(f"| `{p}` | {b} | {f} | {d} |")
+        lines.append("")
+    for p, b, f in info:
+        lines.append(f"- `{p}`: {b!r} (baseline) vs {f!r} (this run)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="the committed BENCH_roundclock.json (stash it "
+                         "before the microbench run overwrites it)")
+    ap.add_argument("--fresh", default="BENCH_roundclock.json",
+                    help="the freshly generated file")
+    args = ap.parse_args(argv)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    errors, timing, info = compare(base, fresh)
+    summary = render_summary(errors, timing, info)
+    print(summary)
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(summary + "\n")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

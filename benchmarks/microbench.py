@@ -206,6 +206,49 @@ def bench_sharded_round(*, smoke=False):
              "consensus behind the tau local steps")
 
 
+def bench_hierarchical_round(*, smoke=False):
+    """Hierarchical 2x2x2 (workers x fsdp x model) round vs the flat 8x1
+    row-sharded round on the same 8 workers: the column group spans both
+    fsdp and model axes, so the partial-Gram psum reduces over 4 column
+    shards (DESIGN.md §Hierarchical-mesh). Needs 8 forced host devices;
+    emits a skipped row otherwise so the CSV schema is stable."""
+    if len(jax.devices()) < 8:
+        csv("microbench", op="hierarchical_round", skipped=1,
+            note="needs 8 devices; set "
+                 "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return None
+    from repro.launch.mesh import make_flat_engine_mesh, make_hier_engine_mesh
+    data = default_data()
+    opt = make_optimizer("sgd")
+    M, bs, tau = 8, 16 if smoke else 64, 4
+    n_it = 3 if smoke else 20
+    batch = {"x": jnp.zeros((tau, M, bs, data["dim"])),
+             "y": jnp.zeros((tau, M, bs), jnp.int32)}
+    init = lambda k: mlp_init(k, data["dim"], data["n_classes"],
+                              width=32 if smoke else 256)
+    dcfg = DPPFConfig(alpha=0.1, lam=0.5, tau=tau, engine="flat")
+    out = {}
+    for name, (mesh, plan) in (("flat_8x1", make_flat_engine_mesh(M)),
+                               ("hier_2x2x2", make_hier_engine_mesh(2, 2, 2))):
+        st = shard_train_state(
+            init_train_state(init, opt, dcfg, M, jax.random.PRNGKey(0)),
+            mesh, plan)
+        fn = jax.jit(make_sharded_round_step(
+            mlp_loss, opt, dcfg, mesh=mesh, plan=plan, base_lr=0.05,
+            total_steps=100), donate_argnums=0)
+        us = _time_donated(lambda s: fn(s, batch)[0], st, n=n_it)
+        # us_ prefix: check_bench treats these as host-relative timing
+        out[f"us_{name}"] = round(us, 1)
+        csv("microbench", op=f"hierarchical_round_{name}",
+            us_per_call=round(us, 1),
+            mesh="x".join(str(s) for s in mesh.devices.shape))
+    csv("microbench", op="hierarchical_round",
+        flat_vs_hier=round(out["us_flat_8x1"] / out["us_hier_2x2x2"], 2),
+        note="same 8 workers; hier column-shards the (R, n) view over "
+             "fsdp x model with the Gram psum spanning both axes")
+    return out
+
+
 def bench_roundclock(*, smoke=False):
     """QSR RoundClock vs fixed tau: communication rounds (= consensus
     all-reduces) saved at the same step budget, and the wall cost of the
@@ -253,11 +296,13 @@ def run(*, smoke=False):
     bench_pullpush(smoke=smoke)
     bench_round_vs_ddp(smoke=smoke)
     bench_sharded_round(smoke=smoke)
+    hier_row = bench_hierarchical_round(smoke=smoke)
     roundclock = bench_roundclock(smoke=smoke)
     # machine-readable perf trajectory across PRs (repo root)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     payload = {"smoke": smoke, "backend": jax.default_backend(),
-               "roundclock": roundclock, "engine_vs_tree": engine_row}
+               "roundclock": roundclock, "engine_vs_tree": engine_row,
+               "hierarchical_round": hier_row}
     path = os.path.join(root, "BENCH_roundclock.json")
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

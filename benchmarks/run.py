@@ -11,6 +11,59 @@ import sys
 import time
 import traceback
 
+# Paper-artifact registry: one row per suite — (paper artifact, script,
+# what it reproduces). ``render_experiments.py`` turns this into the
+# EXPERIMENTS.md / README.md artifact tables (CI fails when EXPERIMENTS.md
+# drifts), so a new suite needs its row here to be documented.
+ARTIFACTS = {
+    "microbench": (
+        "—", "benchmarks/microbench.py",
+        "hot-path microbenches (engine_vs_tree, sharded_round, "
+        "hierarchical_round, roundclock); writes BENCH_roundclock.json"),
+    "theorem1": (
+        "Thm. 1", "benchmarks/theorem1_width.py",
+        "asymptotic valley width -> lambda/alpha on the proof recurrence "
+        "and on real DNN training"),
+    "fig2": (
+        "Fig. 2-3", "benchmarks/fig2_valley_collapse.py",
+        "valley collapse without the push force; pull/push tug-of-war"),
+    "table1": (
+        "Table 1", "benchmarks/table1_sharpness.py",
+        "Kendall rank correlation of sharpness measures vs generalization "
+        "gap"),
+    "table2": (
+        "Table 2 / Fig. 1", "benchmarks/table2_comm.py",
+        "communication volume vs test error: DDP / LocalSGD / QSR / DPPF"),
+    "table3": (
+        "Table 3", "benchmarks/table3_softconsensus.py",
+        "soft-consensus optimizers with/without the push (incl. Remark 1: "
+        "LSGD push-from-leader vs push-from-average)"),
+    "table4": (
+        "Table 4", "benchmarks/table4_sam.py",
+        "local vs distributed flatness: DDP/DPPF x SGD/SAM grid"),
+    "table5": (
+        "Table 5", "benchmarks/table5_noniid.py",
+        "non-IID FL: SCAFFOLD / FedLESAM with and without DPPF "
+        "aggregation"),
+    "ablate_schedule": (
+        "§C.2 + §7.2", "benchmarks/ablate_schedule.py",
+        "lambda-schedule ablation (fixed/increasing/decreasing) plus the "
+        "increasing+qsr round-clock row: QSR-adaptive tau on the best "
+        "schedule, reporting comm volume next to error"),
+    "ablate_second_term": (
+        "§D.1 / Fig. 7", "benchmarks/ablate_second_term.py",
+        "is the dropped second push term T2 negligible?"),
+    "d2_theorem2": (
+        "§D.2 / Thm. 2", "benchmarks/d2_theorem2.py",
+        "sensitivity of test error to lambda; Theorem 2's assumptions"),
+    "ablate_workers": (
+        "Tables 3-4 (M axis)", "benchmarks/ablate_workers.py",
+        "worker-count scaling of the push edge and width M-robustness"),
+    "roofline": (
+        "—", "benchmarks/roofline_report.py",
+        "per-(arch x shape x mesh) roofline from dry-run records"),
+}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -44,6 +97,9 @@ def main() -> None:
         "table1": lambda: table1_sharpness.run(steps=120 if fast else 300),
         "roofline": lambda: roofline_report.run(),
     }
+    if set(suites) != set(ARTIFACTS):
+        raise SystemExit("ARTIFACTS registry out of sync with suites: "
+                         f"{sorted(set(suites) ^ set(ARTIFACTS))}")
     only = [s for s in args.only.split(",") if s]
     failures = []
     for name, fn in suites.items():

@@ -76,9 +76,12 @@ class ShardedLayout:
     (`make_sharded_round_step`), never inside the engine. Any contraction
     over the column (parameter) dimension — the Gram, gap Grams, distances
     to the mean — is completed with a ``psum`` over ``col_axes``; the
-    mixing GEMM is column-local and needs no collective. Hashable, so a
-    sharded engine stays valid jit-static metadata (DESIGN.md
-    §Sharded-execution).
+    mixing GEMM is column-local and needs no collective. ``col_axes`` may
+    name MULTIPLE mesh axes — on a hierarchical ``workers x fsdp x model``
+    mesh it is the whole ``("fsdp", "model")`` group and the one psum
+    reduces over all ``fsdp x model`` column shards (DESIGN.md
+    §Hierarchical-mesh). Hashable, so a sharded engine stays valid
+    jit-static metadata (DESIGN.md §Sharded-execution).
     """
     row_axes: Tuple[str, ...] = ()
     col_axes: Tuple[str, ...] = ()

@@ -35,8 +35,13 @@ from repro.launch import specs as specs_lib
 from repro.models import build_model
 from repro.optim import make_optimizer
 from repro.serving import make_serve_step
-from repro.train import init_train_state, make_round_step, make_ddp_step
+from repro.train import (RoundClock, init_train_state, make_round_step,
+                         make_ddp_step)
 from repro.train.trainer import TrainState
+
+# the LR/step budget every train-mode dry-run compiles against (and the
+# clock the report's round-plan table renders)
+TRAIN_LR, TRAIN_STEPS = 0.1, 1000
 
 
 def _sds(tree_specs, tree_shardings):
@@ -99,7 +104,8 @@ def build_train(arch, shape, mesh, plan, *, ddp=False, tau=4,
     M = _n_workers(mesh, plan)
 
     if ddp:
-        step = make_ddp_step(model.loss, opt, base_lr=0.1, total_steps=1000)
+        step = make_ddp_step(model.loss, opt, base_lr=TRAIN_LR,
+                             total_steps=TRAIN_STEPS)
 
         def _ddp_state(k):
             p = model.init(k)
@@ -117,8 +123,8 @@ def build_train(arch, shape, mesh, plan, *, ddp=False, tau=4,
         b_sh = mesh_lib.batch_shardings(mesh, batch_specs, plan,
                                         round_dims=False)
     else:
-        step = make_round_step(model.loss, opt, dcfg, base_lr=0.1,
-                               total_steps=1000)
+        step = make_round_step(model.loss, opt, dcfg, base_lr=TRAIN_LR,
+                               total_steps=TRAIN_STEPS)
         state_specs = jax.eval_shape(
             lambda k: init_train_state(model.init, opt, dcfg, M, k),
             jax.random.PRNGKey(0))
@@ -278,6 +284,12 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
+
+    # round-plan report: the clock every train-mode combo compiles against
+    # (DESIGN.md §Round-clock) — tau from the CLI, the dry-run LR budget
+    print(RoundClock(total_steps=TRAIN_STEPS, tau=args.tau,
+                     base_lr=TRAIN_LR).plan_table())
+    print()
 
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]

@@ -28,18 +28,58 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_hierarchical_mesh(workers: int, fsdp: int, model: int,
-                           *, multi_pod: bool = False):
-    """Hillclimb variant: re-view the same chips as (worker, fsdp, model) so
-    big models FSDP-shard within each DPPF worker (DESIGN.md memory note).
-    Single-pod must satisfy workers*fsdp*model == 256 (512 multi-pod)."""
-    n = 512 if multi_pod else 256
+                           *, multi_pod: bool = False, devices=None):
+    """Re-view the chips as (worker, fsdp, model) so big models FSDP-shard
+    within each DPPF worker (DESIGN.md §Hierarchical-mesh). ``devices=None``
+    targets the assigned production pod — the product must equal 256
+    chips (512 multi-pod). Pass an explicit device list (e.g. the host's
+    forced CPU devices) to build the same 3-axis plan at any size; the
+    product must then cover exactly those devices."""
+    if min(workers, fsdp, model) < 1:
+        # ValueError, not assert: user-facing (--mesh) and must survive -O
+        raise ValueError(f"hierarchical mesh axes must all be >= 1, got "
+                         f"{workers}x{fsdp}x{model}")
+    if devices is None:
+        n = 512 if multi_pod else 256
+        kind = "multi-pod" if multi_pod else "single-pod"
+        pool = jax.devices()[:n]
+    else:
+        pool = list(devices)
+        n = len(pool)
+        kind = f"{n} given devices"
     if workers * fsdp * model != n:
         raise ValueError(
             f"hierarchical mesh shape {workers}x{fsdp}x{model} = "
             f"{workers * fsdp * model} chips must use exactly {n} "
-            f"({'multi-pod' if multi_pod else 'single-pod'})")
-    devs = np.asarray(jax.devices()[:n]).reshape(workers, fsdp, model)
+            f"({kind})")
+    devs = np.asarray(pool).reshape(workers, fsdp, model)
     return Mesh(devs, ("data", "fsdp", "model"))
+
+
+def hierarchical_plan() -> MeshPlan:
+    """The MeshPlan matching ``make_hierarchical_mesh``'s axis names: DPPF
+    workers on "data", weight-storage column shards on "fsdp",
+    tensor-parallel on "model"."""
+    return MeshPlan(worker_axes=("data",), fsdp_axes=("fsdp",),
+                    model_axes=("model",))
+
+
+def make_hier_engine_mesh(workers: int, fsdp: int, model: int):
+    """``(mesh, plan)`` over the host's local devices for the sharded flat
+    engine — ``launch/train.py --mesh workers,fsdp,model``. Unlike the
+    production builder this validates against the actual local device
+    count (force it with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``)."""
+    devs = jax.devices()
+    need = workers * fsdp * model
+    if need > len(devs):
+        raise ValueError(
+            f"hierarchical mesh {workers}x{fsdp}x{model} needs {need} "
+            f"devices, host has {len(devs)} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need})")
+    mesh = make_hierarchical_mesh(workers, fsdp, model,
+                                  devices=devs[:need])
+    return mesh, hierarchical_plan()
 
 
 def make_cpu_mesh():
@@ -145,16 +185,27 @@ def param_shardings(mesh: Mesh, params, plan: MeshPlan, *, stacked=True):
     return jax.tree_util.tree_map_with_path(one, params)
 
 
-def flat_col_entry(mesh: Mesh, n: int, plan: MeshPlan):
-    """PartitionSpec entry for the flat view's column dim: the fsdp+model
-    axis group when it divides n, else None (replicate fallback). The ONE
+def flat_col_axes(mesh: Mesh, n: int, plan: MeshPlan):
+    """Effective column axis group for the flat view's column dim. The ONE
     copy of the column-divisibility rule — shared by `flat_view_sharding`,
-    `train.trainer.make_sharded_round_step`'s in_specs, and the staleness-1
-    snapshot placement."""
-    col_axes = plan.fsdp_axes + plan.model_axes
-    if col_axes and n % _axes_size(mesh, col_axes) == 0:
-        return _axes_entry(col_axes)
-    return None
+    `train.trainer.make_sharded_round_step` (in_specs AND the engine's
+    partial-Gram psum group), and the staleness-1 snapshot placement.
+
+    Preference order: the full ``fsdp + model`` group when its size
+    divides n (the hierarchical mesh's normal case — the psum then spans
+    BOTH axes), else fsdp alone, else model alone, else ``()`` (columns
+    replicate and the psum degenerates to a no-op)."""
+    for axes in (plan.fsdp_axes + plan.model_axes, plan.fsdp_axes,
+                 plan.model_axes):
+        if axes and n % _axes_size(mesh, axes) == 0:
+            return tuple(axes)
+    return ()
+
+
+def flat_col_entry(mesh: Mesh, n: int, plan: MeshPlan):
+    """PartitionSpec entry form of `flat_col_axes` (None = replicated)."""
+    axes = flat_col_axes(mesh, n, plan)
+    return _axes_entry(axes) if axes else None
 
 
 def flat_view_sharding(mesh: Mesh, shape, plan: MeshPlan):

@@ -55,6 +55,14 @@ def main(argv=None):
                     help="run the round under shard_map on all local "
                          "devices (launch.mesh.make_flat_engine_mesh; "
                          "flat engine only)")
+    ap.add_argument("--mesh", default="", metavar="W,F,M",
+                    help="workers,fsdp,model — run the round under "
+                         "shard_map on a hierarchical 3-axis mesh of "
+                         "local devices (launch.mesh.make_hier_engine_"
+                         "mesh; flat engine only): worker rows over the "
+                         "first axis, flat-view columns over fsdp x "
+                         "model. E.g. --mesh 2,2,2 under XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8")
     ap.add_argument("--lam-schedule", default="increasing")
     ap.add_argument("--tau-schedule", default="fixed",
                     choices=["fixed", "qsr"],
@@ -79,10 +87,23 @@ def main(argv=None):
                          "exists")
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args(argv)
-    if args.sharded and (args.engine != "flat" or args.consensus == "ddp"):
-        ap.error("--sharded requires --engine flat and a non-ddp consensus "
-                 "(the shard_map round runs on the flat engine's (R, n) "
-                 "view)")
+    if (args.sharded or args.mesh) and (args.engine != "flat"
+                                        or args.consensus == "ddp"):
+        ap.error("--sharded/--mesh require --engine flat and a non-ddp "
+                 "consensus (the shard_map round runs on the flat "
+                 "engine's (R, n) view)")
+    if args.sharded and args.mesh:
+        ap.error("--sharded and --mesh are mutually exclusive (--mesh IS "
+                 "a sharded run on an explicit workers,fsdp,model shape)")
+    mesh_shape = ()
+    if args.mesh:
+        try:
+            mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+            if len(mesh_shape) != 3:
+                raise ValueError
+        except ValueError:
+            ap.error("--mesh expects three comma-separated ints: "
+                     "workers,fsdp,model (e.g. --mesh 2,2,2)")
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -159,10 +180,17 @@ def main(argv=None):
                     state, round=jnp.asarray(rnd, jnp.int32))
             print(f"resumed from {state_file} at step {t_res} "
                   f"(round {rnd})")
-        if args.sharded:
-            from repro.launch.mesh import make_flat_engine_mesh
-            mesh, plan = make_flat_engine_mesh(args.workers)
+        if args.sharded or mesh_shape:
+            if mesh_shape:
+                from repro.launch.mesh import make_hier_engine_mesh
+                mesh, plan = make_hier_engine_mesh(*mesh_shape)
+            else:
+                from repro.launch.mesh import make_flat_engine_mesh
+                mesh, plan = make_flat_engine_mesh(args.workers)
             print(f"sharded round on mesh {dict(mesh.shape)}")
+            # resume happened ABOVE on host arrays, so a checkpoint written
+            # under any mesh shape (or none) reshards here — the 2x2x2 ->
+            # 8x1 cross-shape resume the tests pin
             state = shard_train_state(state, mesh, plan)
             step = jax.jit(make_sharded_round_step(
                 model.loss, opt, dcfg, mesh=mesh, plan=plan, clock=clock,

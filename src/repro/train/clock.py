@@ -182,9 +182,53 @@ class RoundClock:
         """Cosine LR at global step ``t`` (traced ok)."""
         return cosine_lr(self.base_lr, t, self.total_steps, self.warmup)
 
+    def _host_lam(self, round_idx: int) -> float:
+        """Pure-python twin of ``lam_at`` for the host-side plan report."""
+        T = max(self.total_rounds - 1, 1)
+        if self.total_rounds == 1:
+            return self.lam
+        frac = min(max(round_idx / T, 0.0), 1.0)
+        if self.lam_kind == "fixed":
+            return self.lam
+        if self.lam_kind == "decreasing":
+            return self.lam / 2.0 * (1.0 + math.cos(frac * math.pi))
+        if self.lam_kind == "increasing":
+            return self.lam / 2.0 * (1.0 - math.cos(frac * math.pi))
+        raise ValueError(self.lam_kind)
+
     def describe(self) -> dict:
-        """Machine-readable summary (benchmarks/BENCH_roundclock.json)."""
+        """Machine-readable summary + full round plan (the committed
+        ``BENCH_roundclock.json`` baseline and the dry-run report's table
+        both render this). ``plan`` has one row per round: index, global
+        start step, tau, the lam the round applies, and the LR window
+        ``[lr_start, lr_end]`` its local steps sweep (floats rounded to 6
+        digits so the committed baseline compares stably across hosts).
+
+        Worked QSR example — ``RoundClock(total_steps=64, tau=4,
+        base_lr=0.3, tau_schedule="qsr", qsr_beta=0.4)``: a round starting
+        at step t gets ``tau_t = max(4, floor((0.4 / eta_t)^2))`` from the
+        cosine LR ``eta_t``. Early rounds keep tau=4 (eta(0) = 0.3 ->
+        floor(1.77) = 1 < 4); at step 32, eta = 0.15 -> floor(7.11) = 7;
+        at step 39, eta ~ 0.0995 -> 16; the round at step 55 would get a
+        huge tau but is capped to the 9 remaining steps. Full plan: taus
+        (4,4,4,4,4,4,4,4,7,16,9) — 11 rounds vs 16 fixed, 5 consensus
+        all-reduces saved (``tests/test_clock.py`` pins exactly this
+        plan)."""
         taus = self.taus()
+        plan = []
+        for spec in self.rounds:
+            plan.append({
+                "round": spec.index,
+                "start": spec.start,
+                "tau": spec.tau,
+                "lam": round(self._host_lam(spec.index), 6),
+                "lr_start": round(_host_cosine_lr(
+                    self.base_lr, spec.start, self.total_steps,
+                    self.warmup), 6),
+                "lr_end": round(_host_cosine_lr(
+                    self.base_lr, spec.stop - 1, self.total_steps,
+                    self.warmup), 6),
+            })
         return {
             "total_steps": self.total_steps,
             "tau_base": self.tau,
@@ -195,4 +239,31 @@ class RoundClock:
             "allreduces_saved": self.fixed_rounds - self.total_rounds,
             "tau_min": min(taus),
             "tau_max": max(taus),
+            "plan": plan,
         }
+
+    def plan_table(self, max_rows: int = 12) -> str:
+        """The round plan as a markdown table (the dry-run report prints
+        this). Long plans elide the middle, keeping the first and last
+        ``max_rows // 2`` rounds."""
+        d = self.describe()
+        rows = d["plan"]
+        head = [f"round plan: {d['rounds']} rounds over "
+                f"{d['total_steps']} steps (tau_schedule="
+                f"{d['tau_schedule']}, tau {d['tau_min']}..{d['tau_max']}, "
+                f"all-reduces saved vs fixed: {d['allreduces_saved']})",
+                "| round | start | tau | lam | lr window |",
+                "|---|---|---|---|---|"]
+        if len(rows) > max_rows:
+            half = max(max_rows // 2, 1)
+            shown = list(rows[:half]) + [None] + list(rows[-half:])
+        else:
+            shown = rows
+        for r in shown:
+            if r is None:
+                head.append("| ... | | | | |")
+                continue
+            head.append(f"| {r['round']} | {r['start']} | {r['tau']} | "
+                        f"{r['lam']:.4f} | {r['lr_start']:.4f} -> "
+                        f"{r['lr_end']:.4f} |")
+        return "\n".join(head)

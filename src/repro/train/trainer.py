@@ -288,9 +288,13 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
     gather/psum have no data dependence on this round's scan and overlap
     with the local compute.
 
-    Requires M divisible by the worker-axes size; columns fall back to
-    replicated (with the psum a no-op) when n is not divisible by the
-    column-axes size. jit with ``donate_argnums=0`` at the callsite, like
+    On a hierarchical ``workers x fsdp x model`` mesh
+    (`launch.mesh.make_hier_engine_mesh`) the column group spans BOTH the
+    fsdp and model axes and the partial-Gram psum reduces over the full
+    group. Requires M divisible by the worker-axes size; the column group
+    falls back per `launch.mesh.flat_col_axes` (full fsdp+model group ->
+    divisible sub-group -> replicated with the psum a no-op) when n is not
+    divisible. jit with ``donate_argnums=0`` at the callsite, like
     ``make_round_step``.
     """
     from jax.experimental.shard_map import shard_map
@@ -301,7 +305,6 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                               "make_sharded_round_step")
     overlap = getattr(dcfg, "overlap", "none") == "staleness1"
     row_axes = tuple(plan.worker_axes)
-    col_axes = tuple(plan.fsdp_axes) + tuple(plan.model_axes)
     sizes = dict(mesh.shape)
     row_size = math.prod(sizes[a] for a in row_axes) if row_axes else 1
 
@@ -316,11 +319,13 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             raise ValueError(
                 f"workers ({M}) not divisible over worker axes "
                 f"{row_axes} (size {row_size})")
-        from repro.launch.mesh import flat_col_entry
-        # divisibility fallback (the shared rule): replicate columns, the
-        # psum then degenerates to a no-op
-        col_e = flat_col_entry(mesh, n, plan)
-        eff_cols = col_axes if col_e is not None else ()
+        from repro.launch.mesh import flat_col_axes
+        # the shared column rule (launch.mesh.flat_col_axes): the full
+        # fsdp+model group when divisible — the partial-Gram psum then
+        # spans both axes — else the divisible sub-group, else replicated
+        # columns with the psum a no-op
+        eff_cols = flat_col_axes(mesh, n, plan)
+        col_e = _axis_entry(eff_cols)
         cols = math.prod(sizes[a] for a in eff_cols) if eff_cols else 1
         n_loc, m_loc = n // cols, M // row_size
         s_engine = dataclasses.replace(engine, shard=ShardedLayout(

@@ -60,9 +60,19 @@ def main():
                                                 engine=eng),
                   "lsgd without losses (flat)")
 
-    from repro.launch.mesh import make_hierarchical_mesh
+    from repro.launch.mesh import make_hier_engine_mesh, make_hierarchical_mesh
     expect_raises(ValueError, lambda: make_hierarchical_mesh(7, 5, 3),
                   "hierarchical mesh with impossible factors")
+    expect_raises(ValueError, lambda: make_hierarchical_mesh(0, 2, 2),
+                  "hierarchical mesh with zero-size axis")
+    import jax
+    devs = jax.devices()
+    expect_raises(ValueError,
+                  lambda: make_hierarchical_mesh(2, 2, 2, devices=devs[:1]),
+                  "hierarchical mesh product != given devices")
+    expect_raises(ValueError,
+                  lambda: make_hier_engine_mesh(len(devs) + 1, 2, 2),
+                  "hierarchical engine mesh beyond host devices")
 
     from repro.launch.specs import train_batch_specs
     from repro.configs.base import InputShape

@@ -57,6 +57,47 @@ def test_round_plan_fixed_with_remainder():
         clock.round_of_step(11)
 
 
+def test_describe_returns_full_round_plan():
+    """describe() carries the per-round plan (the dry-run report table and
+    the committed BENCH_roundclock.json baseline both render it); the
+    docstring's worked QSR example is pinned here."""
+    clock = RoundClock(total_steps=10, tau=4, base_lr=0.1, lam=0.5,
+                       lam_kind="increasing")
+    d = clock.describe()
+    assert [(r["round"], r["start"], r["tau"]) for r in d["plan"]] == [
+        (0, 0, 4), (1, 4, 4), (2, 8, 2)]
+    # lam spans both endpoints: round 0 zero (increasing), last round full
+    assert d["plan"][0]["lam"] == 0.0
+    assert abs(d["plan"][-1]["lam"] - 0.5) < 1e-6
+    # lam matches the traced read the builders use
+    for r in d["plan"]:
+        assert abs(r["lam"] - float(clock.lam_at(r["round"]))) < 1e-6
+    # lr window: cosine from base_lr down toward 0
+    assert abs(d["plan"][0]["lr_start"] - 0.1) < 1e-6
+    assert d["plan"][-1]["lr_end"] < d["plan"][0]["lr_start"]
+    for r in d["plan"]:
+        assert abs(r["lr_start"] - float(clock.lr_at(r["start"]))) < 1e-6
+
+    # the worked QSR example from the describe() docstring
+    qsr = RoundClock(total_steps=64, tau=4, base_lr=0.3,
+                     tau_schedule="qsr", qsr_beta=0.4)
+    assert qsr.taus() == (4, 4, 4, 4, 4, 4, 4, 4, 7, 16, 9)
+    dq = qsr.describe()
+    assert dq["rounds"] == 11 and dq["fixed_rounds"] == 16
+    assert dq["allreduces_saved"] == 5
+
+
+def test_plan_table_renders_and_elides():
+    clock = RoundClock(total_steps=10, tau=4, base_lr=0.1)
+    table = clock.plan_table()
+    assert "| round | start | tau | lam | lr window |" in table
+    assert table.count("\n") == 2 + 3  # header x3 + one line per round
+    long = RoundClock(total_steps=400, tau=4, base_lr=0.1)
+    elided = long.plan_table(max_rows=6)
+    assert "| ... |" in elided
+    assert "| 0 | 0 | 4 |" in elided and "| 99 | 396 | 4 |" in elided
+
+
 def test_round_plan_validation():
     with pytest.raises(ValueError, match="tau schedule"):
         RoundClock(total_steps=8, tau=4, tau_schedule="bogus")

@@ -155,6 +155,30 @@ print(json.dumps({
     assert got["bq"] == "PartitionSpec('data', None, None)"  # 6 % 4 != 0
 
 
+def test_dryrun_report_prints_round_plan(tmp_path):
+    """The dry-run report leads with the RoundClock.describe() plan table
+    (ISSUE 4 / ROADMAP RoundClock item). Runs main() with the one combo
+    pre-seeded as cached, so no 512-device compile happens."""
+    out_dir = tmp_path / "dryrun"
+    out_dir.mkdir()
+    (out_dir / "gemma2-2b_train_4k_single_train_baseline.json").write_text(
+        "{}")
+    body = rf"""
+import sys
+sys.argv = ["dryrun", "--arch", "gemma2-2b", "--shape", "train_4k",
+            "--mesh", "single", "--tau", "4", "--out", {str(out_dir)!r}]
+from repro.launch import dryrun
+dryrun.main()
+"""
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                         text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "round plan: 250 rounds over 1000 steps" in out.stdout
+    assert "| round | start | tau | lam | lr window |" in out.stdout
+    assert "[skip]" in out.stdout and "all dry-runs passed" in out.stdout
+
+
 @pytest.mark.slow
 def test_dryrun_reduced_multidevice():
     """End-to-end: lower+compile the DPPF round for a REDUCED arch on an

@@ -255,6 +255,72 @@ def test_sharded_round_multi_axis_worker_group_and_tree_rejection():
 
 
 # ---------------------------------------------------------------------------
+# hierarchical mesh: builders + 3-axis round on a 1x1x1 mesh
+# ---------------------------------------------------------------------------
+
+def test_make_hier_engine_mesh_validates_device_count():
+    from repro.launch.mesh import make_hier_engine_mesh
+    ndev = len(jax.devices())
+    with pytest.raises(ValueError, match="host has"):
+        make_hier_engine_mesh(ndev + 1, 2, 2)
+    with pytest.raises(ValueError, match=">= 1"):
+        make_hier_engine_mesh(0, 1, 1)
+
+
+def test_hier_round_1x1x1_matches_plain():
+    """The 3-axis plan (worker rows on data, columns on fsdp x model) runs
+    the identical program on a trivial 1x1x1 mesh — parity with the plain
+    single-shard round, aux row (easgd) included."""
+    from repro.launch.mesh import make_hier_engine_mesh
+    M, tau = 4, 2
+    opt, p0, loss, batches = _mlp_setup(M=M, tau=tau)
+    mesh, plan = make_hier_engine_mesh(1, 1, 1)
+    assert plan.fsdp_axes == ("fsdp",)
+    dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, consensus="easgd",
+                      engine="flat")
+    key = jax.random.PRNGKey(0)
+    st1 = init_train_state(p0, opt, dcfg, M, key)
+    st2 = shard_train_state(init_train_state(p0, opt, dcfg, M, key),
+                            mesh, plan)
+    f1 = jax.jit(make_round_step(loss, opt, dcfg, base_lr=0.05,
+                                 total_steps=20))
+    f2 = jax.jit(make_sharded_round_step(loss, opt, dcfg, mesh=mesh,
+                                         plan=plan, base_lr=0.05,
+                                         total_steps=20))
+    for r in range(2):
+        st1, m1 = f1(st1, batches(r))
+        st2, m2 = f2(st2, batches(r))
+    np.testing.assert_allclose(np.asarray(st1.params), np.asarray(st2.params),
+                               atol=1e-6, rtol=1e-6)
+    for k in ("consensus_dist", "pre_dist", "train_loss"):
+        np.testing.assert_allclose(float(m1[k]), float(m2[k]), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_flat_col_axes_subgroup_fallback():
+    """The shared column rule: full fsdp+model group when divisible, else
+    the divisible sub-group, else replicated. Pure function of the mesh
+    SHAPE — a stub mesh suffices (no devices needed)."""
+    from types import SimpleNamespace
+    from repro.launch.mesh import flat_col_axes, flat_col_entry
+    from repro.configs import MeshPlan
+    mesh = SimpleNamespace(shape={"data": 2, "fsdp": 2, "model": 3})
+    plan = MeshPlan(worker_axes=("data",), fsdp_axes=("fsdp",),
+                    model_axes=("model",))
+    # n divisible by 6: the psum group spans both axes
+    assert flat_col_axes(mesh, 12, plan) == ("fsdp", "model")
+    assert flat_col_entry(mesh, 12, plan) == ("fsdp", "model")
+    # n % 3 != 0 but n % 2 == 0: fsdp-only fallback
+    assert flat_col_axes(mesh, 8, plan) == ("fsdp",)
+    assert flat_col_entry(mesh, 8, plan) == "fsdp"
+    # n % 2 != 0 but n % 3 == 0: model-only fallback
+    assert flat_col_axes(mesh, 9, plan) == ("model",)
+    # prime n: replicate
+    assert flat_col_axes(mesh, 7, plan) == ()
+    assert flat_col_entry(mesh, 7, plan) is None
+
+
+# ---------------------------------------------------------------------------
 # checkpoint: mid-run resume == straight-through
 # ---------------------------------------------------------------------------
 
@@ -407,6 +473,135 @@ dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, engine="flat",
 dp, dm = run_pair(dcfg, engine_patch={"precise": True}, rounds=3)
 assert dp < 1e-6 and dm < 1e-5, ("overlap", dp, dm)
 print("overlap OK")
+print("ALL OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep + ROOT)
+    out = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                         text=True, env=env, timeout=560, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "ALL OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_hierarchical_2x2x2_parity_and_cross_mesh_resume_8dev():
+    """The acceptance leg (ISSUE 4): on 8 forced host devices, a 2x2x2
+    workers x fsdp x model round — the partial-Gram psum spanning BOTH
+    column axes, aux rows + fsdp column shards together — is bit-for-bit
+    equal to the flat 8x1 row-sharded round in precise mode for every
+    consensus method (<= 1 ulp of fp32; lsgd's argmin sees ulp-level loss
+    inputs), within the Gram floor in fast mode, kernel path included;
+    and a checkpoint saved mid-run on the 2x2x2 mesh resumes onto the 8x1
+    mesh bit-for-bit (mesh-shape-independent checkpoints)."""
+    body = r"""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.checkpoint import load_train_state, save_train_state
+from repro.configs import DPPFConfig, MeshPlan
+from repro.core import consensus
+from repro.train import (init_train_state, make_sharded_round_step,
+                         shard_train_state)
+from repro.optim import make_optimizer
+from benchmarks.common import mlp_init, mlp_loss
+
+dim, ncls, width, M, tau = 16, 4, 8, 8, 2
+key = jax.random.PRNGKey(0)
+opt = make_optimizer("sgd", momentum=0.9)
+p0 = lambda k: mlp_init(k, dim, ncls, width)
+def batches(seed):
+    k = jax.random.PRNGKey(seed)
+    return {"x": jax.random.normal(k, (tau, M, 8, dim)),
+            "y": jax.random.randint(jax.random.fold_in(k, 1),
+                                    (tau, M, 8), 0, ncls)}
+
+from repro.launch.mesh import flat_col_axes, make_hier_engine_mesh
+hmesh, hplan = make_hier_engine_mesh(2, 2, 2)
+fmesh = Mesh(np.asarray(jax.devices()).reshape(8, 1), ("data", "model"))
+fplan = MeshPlan(worker_axes=("data",), model_axes=("model",))
+MKEYS = ("consensus_dist", "pre_dist", "pull_force", "push_force",
+         "train_loss", "lam_t")
+
+def run_pair(dcfg, engine_patch=None, rounds=2):
+    st0 = init_train_state(p0, opt, dcfg, M, key)
+    if st0.engine is None:  # ddp: reuse the simple_avg layout (aux = 0)
+        st0 = init_train_state(
+            p0, opt, dataclasses.replace(dcfg, consensus="simple_avg"),
+            M, key)
+    if engine_patch:
+        st0 = dataclasses.replace(
+            st0, engine=dataclasses.replace(st0.engine, **engine_patch))
+    # the column group must really span both axes (4 shards)
+    assert flat_col_axes(hmesh, st0.engine.layout.n, hplan) == \
+        ("fsdp", "model")
+    st1 = shard_train_state(st0, hmesh, hplan)
+    st2 = shard_train_state(st0, fmesh, fplan)
+    f1 = jax.jit(make_sharded_round_step(mlp_loss, opt, dcfg, mesh=hmesh,
+                                         plan=hplan, base_lr=0.05,
+                                         total_steps=20))
+    f2 = jax.jit(make_sharded_round_step(mlp_loss, opt, dcfg, mesh=fmesh,
+                                         plan=fplan, base_lr=0.05,
+                                         total_steps=20))
+    for r in range(rounds):
+        st1, m1 = f1(st1, batches(r))
+        st2, m2 = f2(st2, batches(r))
+    dp = float(jnp.max(jnp.abs(st1.params - st2.params)))
+    dm = max(abs(float(m1[k]) - float(m2[k])) for k in MKEYS)
+    return dp, dm
+
+for method in consensus.METHODS:
+    dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, consensus=method,
+                      engine="flat")
+    dp, dm = run_pair(dcfg, engine_patch={"precise": True})
+    # bit-for-bit up to reduction-order ulps in the (R, R) psums
+    assert dp <= 1e-7 and dm < 1e-5, (method, "precise", dp, dm)
+    dp, dm = run_pair(dcfg)
+    assert dp < 2e-5 and dm < 1e-4, (method, "fast", dp, dm)
+print("hier parity OK")
+
+# kernel path: partial_gram/mix_shard + psum epilogue over BOTH axes
+dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, engine="flat")
+dp, dm = run_pair(dcfg, engine_patch={"use_kernel": True, "interpret": True,
+                                      "block_cols": 32})
+assert dp < 2e-5 and dm < 1e-4, ("kernel", dp, dm)
+print("hier kernel OK")
+
+# cross-mesh resume: 2 rounds on 2x2x2, save, resume on 8x1, 2 more
+# rounds on each -> identical params/opt (checkpoints gather to host and
+# reshard on load)
+dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, consensus="easgd",
+                  engine="flat")
+st0 = init_train_state(p0, opt, dcfg, M, key)
+st0 = dataclasses.replace(
+    st0, engine=dataclasses.replace(st0.engine, precise=True))
+f_h = jax.jit(make_sharded_round_step(mlp_loss, opt, dcfg, mesh=hmesh,
+                                      plan=hplan, base_lr=0.05,
+                                      total_steps=20))
+f_f = jax.jit(make_sharded_round_step(mlp_loss, opt, dcfg, mesh=fmesh,
+                                      plan=fplan, base_lr=0.05,
+                                      total_steps=20))
+st_h = shard_train_state(st0, hmesh, hplan)
+for r in range(2):
+    st_h, _ = f_h(st_h, batches(r))
+with tempfile.TemporaryDirectory() as d:
+    path = os.path.join(d, "hier.npz")
+    save_train_state(path, st_h)
+    template = dataclasses.replace(
+        init_train_state(p0, opt, dcfg, M, key), engine=st_h.engine)
+    st_f = shard_train_state(load_train_state(path, template), fmesh, fplan)
+assert int(st_f.t) == 2 * tau and int(st_f.round) == 2
+for r in range(2, 4):
+    st_h, _ = f_h(st_h, batches(r))
+    st_f, _ = f_f(st_f, batches(r))
+# the two continuations run on different mesh shapes, so the (R, R) psum
+# reduction order differs: ulp-level agreement, same bound as the parity
+# legs above
+np.testing.assert_allclose(np.asarray(st_h.params),
+                           np.asarray(st_f.params), atol=1e-6, rtol=0)
+jax.tree.map(lambda a, b: np.testing.assert_allclose(
+    np.asarray(a), np.asarray(b), atol=1e-6, rtol=0), st_h.opt, st_f.opt)
+print("cross-mesh resume OK")
 print("ALL OK")
 """
     env = dict(os.environ, PYTHONPATH=SRC + os.pathsep + ROOT)
