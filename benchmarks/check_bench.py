@@ -1,5 +1,6 @@
-"""Compare a freshly generated ``BENCH_roundclock.json`` against the
-committed baseline (ROADMAP bench-tracking item).
+"""Compare freshly generated bench JSONs (``BENCH_roundclock.json``,
+``BENCH_overlap.json``) against their committed baselines (ROADMAP
+bench-tracking item).
 
 Two classes of fields:
 
@@ -11,13 +12,18 @@ Two classes of fields:
   they are REPORTED as deltas (and surfaced in the CI job summary via
   ``$GITHUB_STEP_SUMMARY``) but never fail the check.
 
-CI usage (the microbench smoke step overwrites the repo-root file, so the
-baseline is stashed first):
+CI usage (the microbench smoke step overwrites the repo-root files, so the
+baselines are stashed first). ``--baseline``/``--fresh`` repeat and are
+zipped into pairs:
 
     cp BENCH_roundclock.json /tmp/bench_baseline.json
+    cp BENCH_overlap.json /tmp/bench_overlap_baseline.json
     PYTHONPATH=src:. XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         python benchmarks/microbench.py --smoke
-    python benchmarks/check_bench.py --baseline /tmp/bench_baseline.json
+    python benchmarks/check_bench.py \
+        --baseline /tmp/bench_baseline.json \
+        --baseline /tmp/bench_overlap_baseline.json \
+        --fresh BENCH_roundclock.json --fresh BENCH_overlap.json
 """
 from __future__ import annotations
 
@@ -27,7 +33,7 @@ import os
 import sys
 
 TIMING_KEYS = ("wall_s", "speedup", "flat_vs_hier")
-TIMING_PREFIXES = ("us_",)
+TIMING_PREFIXES = ("us_", "speedup_")
 # environment fields: allowed to differ, reported only
 INFO_KEYS = ("backend",)
 
@@ -85,8 +91,8 @@ def compare(base: dict, fresh: dict):
     return errors, timing, info
 
 
-def render_summary(errors, timing, info) -> str:
-    lines = ["## BENCH_roundclock.json vs committed baseline", ""]
+def render_summary(errors, timing, info, *, name="BENCH_roundclock.json") -> str:
+    lines = [f"## {name} vs committed baseline", ""]
     if errors:
         lines += ["**STRUCTURAL DRIFT (check failed)** — regenerate and "
                   "commit the baseline if intended:", ""]
@@ -112,24 +118,34 @@ def render_summary(errors, timing, info) -> str:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", required=True,
-                    help="the committed BENCH_roundclock.json (stash it "
-                         "before the microbench run overwrites it)")
-    ap.add_argument("--fresh", default="BENCH_roundclock.json",
-                    help="the freshly generated file")
+    ap.add_argument("--baseline", required=True, action="append",
+                    help="a committed bench baseline (stash it before the "
+                         "microbench run overwrites it); repeatable — "
+                         "pairs up with --fresh positionally")
+    ap.add_argument("--fresh", action="append",
+                    help="the freshly generated file for the matching "
+                         "--baseline (default: BENCH_roundclock.json for "
+                         "a single pair)")
     args = ap.parse_args(argv)
-    with open(args.baseline) as f:
-        base = json.load(f)
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-    errors, timing, info = compare(base, fresh)
-    summary = render_summary(errors, timing, info)
-    print(summary)
-    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
-    if step_summary:
-        with open(step_summary, "a") as f:
-            f.write(summary + "\n")
-    return 1 if errors else 0
+    fresh_paths = args.fresh or ["BENCH_roundclock.json"]
+    if len(fresh_paths) != len(args.baseline):
+        ap.error("--baseline and --fresh must pair up")
+    failed = False
+    for base_path, fresh_path in zip(args.baseline, fresh_paths):
+        with open(base_path) as f:
+            base = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        errors, timing, info = compare(base, fresh)
+        summary = render_summary(errors, timing, info,
+                                 name=os.path.basename(fresh_path))
+        print(summary)
+        step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+        if step_summary:
+            with open(step_summary, "a") as f:
+                f.write(summary + "\n")
+        failed = failed or bool(errors)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

@@ -29,7 +29,7 @@ def run(out_dir="results/dryrun"):
         coll = sum(v["bytes"] for v in r["collectives"].values())
         csv("roofline",
             arch=r["arch"], shape=r["shape"], mesh=r["mesh"], mode=r["mode"],
-            plan=r["plan"],
+            plan=r["plan"], overlap=r.get("overlap", "none"),
             compute_s=f"{t['compute_s']:.3e}",
             memory_s=f"{t['memory_s']:.3e}",
             collective_s=f"{t['collective_s']:.3e}",
@@ -38,6 +38,22 @@ def run(out_dir="results/dryrun"):
             coll_bytes_dev=f"{coll:.3e}",
             useful_flop_ratio=round(r.get("useful_flop_ratio", 0.0), 3),
             compile_s=r["compile_s"])
+    # the overlap-model comparison (launch.roofline.overlap_model): modeled
+    # round time exact vs staleness1 vs doublebuf against the comm/compute
+    # crossover, one row per train-mode record
+    for r in recs:
+        om = r.get("overlap_model")
+        if not om or r.get("overlap", "none") != "none":
+            continue
+        csv("roofline_overlap",
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"], plan=r["plan"],
+            exact_s=f"{om['exact_s']:.3e}",
+            staleness1_s=f"{om['staleness1_s']:.3e}",
+            doublebuf_s=f"{om['doublebuf_s']:.3e}",
+            crossover=round(om["crossover"], 3),
+            overlap_gain=round(om["overlap_gain"], 3),
+            note="crossover<1: doublebuf hides ALL consensus comm behind "
+                 "the tau local steps")
     return recs
 
 

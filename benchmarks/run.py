@@ -19,7 +19,8 @@ ARTIFACTS = {
     "microbench": (
         "—", "benchmarks/microbench.py",
         "hot-path microbenches (engine_vs_tree, sharded_round, "
-        "hierarchical_round, roundclock); writes BENCH_roundclock.json"),
+        "hierarchical_round, overlap_round, roundclock); writes "
+        "BENCH_roundclock.json + BENCH_overlap.json"),
     "theorem1": (
         "Thm. 1", "benchmarks/theorem1_width.py",
         "asymptotic valley width -> lambda/alpha on the proof recurrence "

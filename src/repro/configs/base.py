@@ -267,9 +267,19 @@ class DPPFConfig:
     # round-boundary overlap: "none" applies the consensus computed from
     # THIS round's post-local-step params (exact, the paper's Alg. 1);
     # "staleness1" applies the consensus computed from the PREVIOUS round's
-    # snapshot, so the round's all-reduce hides behind the tau local steps.
-    # Flat engine only (DESIGN.md §Sharded-execution).
+    # snapshot, so the round's all-reduce hides behind the tau local steps;
+    # "doublebuf" additionally stores that snapshot ROW-SHARDED and
+    # dispatches its worker-row gather + partial-Gram psum in
+    # ``overlap_chunks`` column chunks interleaved with the scan's local
+    # steps, leaving only the coefficient math and the mix GEMM at the
+    # round boundary (DESIGN.md §Overlap). Flat engine only.
     overlap: str = "none"
+    # doublebuf: number of column chunks the mid-scan snapshot gather +
+    # partial-Gram psum are split into (1 = one un-chunked dispatch,
+    # bit-for-bit the staleness1 consensus; more chunks interleave finer
+    # with the tau local steps — effective count is capped by tau and by
+    # the local column count)
+    overlap_chunks: int = 4
 
     def __post_init__(self):
         # ValueError, not assert: every check here guards a user-facing
@@ -281,12 +291,15 @@ class DPPFConfig:
             raise ValueError(f"unknown tau schedule {self.tau_schedule!r}")
         if self.tau_schedule == "qsr" and self.qsr_beta <= 0:
             raise ValueError("tau_schedule='qsr' needs qsr_beta > 0")
-        if self.overlap not in ("none", "staleness1"):
+        if self.overlap not in ("none", "staleness1", "doublebuf"):
             raise ValueError(f"unknown overlap mode {self.overlap!r}")
-        if self.overlap == "staleness1" and self.engine != "flat":
+        if self.overlap != "none" and self.engine != "flat":
             raise ValueError(
-                "overlap='staleness1' requires engine='flat' (the stale "
-                "consensus snapshot lives in the flat view)")
+                f"overlap={self.overlap!r} requires engine='flat' (the "
+                "stale consensus snapshot lives in the flat view)")
+        if self.overlap_chunks < 1:
+            raise ValueError(
+                f"overlap_chunks must be >= 1, got {self.overlap_chunks}")
 
     @property
     def valley_width(self) -> float:

@@ -100,16 +100,22 @@ def _metrics(consensus_dist, pre_dist, pull_force, push_force):
 
 
 def apply_round(params, dcfg, lam_t, state, *, losses=None, grad_norms=None,
-                push_from="average", engine=None):
+                push_from="average", engine=None, first_gram=None):
     """One communication round. Returns (params, state, metrics).
 
     ``params`` is a worker-stacked pytree (tree path) or the engine's flat
     ``(R, n)`` view (flat path). Metrics keys are identical either way.
+    ``first_gram`` (flat path only) is a precomputed column contraction
+    for the FIRST stage — the summed ``engine.stage_comm`` chunks the
+    double-buffered overlap dispatches mid-scan; the stage then runs its
+    coefficient math + mixing only (DESIGN.md §Overlap).
     """
     if engine is not None:
         return _apply_round_flat(engine, params, dcfg, lam_t, state,
                                  losses=losses, grad_norms=grad_norms,
-                                 push_from=push_from)
+                                 push_from=push_from, first_gram=first_gram)
+    if first_gram is not None:
+        raise ValueError("first_gram requires the flat engine")
     return _apply_round_tree(params, dcfg, lam_t, state, losses=losses,
                              grad_norms=grad_norms, push_from=push_from)
 
@@ -157,11 +163,19 @@ def _apply_round_tree(stacked, dcfg, lam_t, state, *, losses, grad_norms,
 # Flat path: thin method -> (target-weights, c0, c1) lowering over the engine
 # ---------------------------------------------------------------------------
 
-def _apply_round_flat(engine, flat, dcfg, lam_t, state, *, losses, grad_norms,
-                      push_from):
-    if engine.eps != dcfg.eps:
-        # the engine's norm guard must match the config's (tree-path parity)
-        engine = dataclasses.replace(engine, eps=dcfg.eps)
+def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
+                 push_from="average"):
+    """Lower a consensus method to its flat-engine stage list.
+
+    Returns ``(stages, alpha)`` with each stage ``("coef", T, c0, c1)`` (a
+    fused target-weight + coefficient mixing stage) or ``("exact", lam_r)``
+    (the Appendix E.1 two-term push). An empty list means ddp (metrics
+    only). Public so the double-buffered trainer can read stage 1's target
+    weights BEFORE the scan — the mid-scan ``stage_comm`` chunks need T1 —
+    and then execute the identical list via ``apply_round(...,
+    first_gram=...)`` (the lowering is a pure function of its inputs, so
+    lowering twice is free trace-time work).
+    """
     method = dcfg.consensus
     alpha = 1.0 if method == "hard" else dcfg.alpha
     L = engine.layout
@@ -221,13 +235,29 @@ def _apply_round_flat(engine, flat, dcfg, lam_t, state, *, losses, grad_norms,
                 else:
                     stages.append(("coef", worker_T(u), zeros,
                                    zeros.at[:M].set(-lam_t)))
+    return stages, alpha
+
+
+def _apply_round_flat(engine, flat, dcfg, lam_t, state, *, losses, grad_norms,
+                      push_from, first_gram=None):
+    if engine.eps != dcfg.eps:
+        # the engine's norm guard must match the config's (tree-path parity)
+        engine = dataclasses.replace(engine, eps=dcfg.eps)
+    stages, alpha = lower_stages(engine, dcfg, lam_t, losses=losses,
+                                 grad_norms=grad_norms, push_from=push_from)
+    if first_gram is not None and (not stages or stages[0][0] != "coef"):
+        raise ValueError("first_gram requires a leading coefficient stage "
+                         "(every non-ddp lowering has one)")
 
     # ---- execute stages; each returns its own exact pre/post metrics ------
+    # only stage 1's contraction can be precomputed: later stages contract
+    # the PREVIOUS stage's output, which does not exist until the boundary
     pre = post = None
-    for stage in stages:
+    for i, stage in enumerate(stages):
         if stage[0] == "coef":
             _, T, c0, c1 = stage
-            flat, _, s_pre, s_post = engine.stage(flat, T, c0, c1)
+            flat, _, s_pre, s_post = engine.stage(
+                flat, T, c0, c1, gram=first_gram if i == 0 else None)
         else:
             _, lam_r = stage
             flat, _, s_pre, s_post = engine.exact_stage(flat, lam_r)

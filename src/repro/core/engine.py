@@ -236,7 +236,30 @@ class ConsensusEngine:
         """x <- W @ x (one GEMM over the flat view)."""
         return W.astype(jnp.float32) @ flat
 
-    def _gap_stage(self, flat, T, c0, c1):
+    def stage_comm(self, chunk, T):
+        """The stage-1 column contraction over a COLUMN CHUNK of the flat
+        view, psum-completed — the piece of a stage that the double-
+        buffered overlap dispatches mid-scan (DESIGN.md §Overlap).
+        Mode-matched to ``stage``: gap Gram (``precise``), plain Gram
+        (fast), block-centered partial Gram (kernel). Contributions from
+        disjoint column chunks ADD to the full-width contraction (the
+        Gram is a sum over columns; the kernel path's per-block centering
+        shift cancels in every zero-sum form), so
+        ``sum_j stage_comm(x[:, j], T)`` feeds ``stage(x, T, c0, c1,
+        gram=...)``. With ONE chunk the ops are identical to the ones
+        ``stage`` itself would run — bit-for-bit the un-overlapped stage.
+        """
+        f = chunk.astype(jnp.float32)
+        if self.use_kernel:
+            from repro.kernels.pullpush import pullpush as pk
+            return self._colsum(pk.partial_gram(
+                f, block_cols=self.block_cols, interpret=self.interpret))
+        if self.precise:
+            g = T.astype(jnp.float32) @ f - f
+            return self._colsum(g @ g.T)
+        return self._colsum(f @ f.T)
+
+    def _gap_stage(self, flat, T, c0, c1, *, gram=None):
         """Exact (``precise=True``) stage: materialize the targets
         ``tx = T x`` and work in gap space — distances are
         ``diag((tx - x)(tx - x)^T)`` (cancellation-free by construction),
@@ -244,7 +267,8 @@ class ConsensusEngine:
         for c = 1, reproducing the target bitwise, and for huge |c|, which
         scales a difference of nearby values), and the pre/post metrics are
         forms over the gap Gram. One extra (R, n) buffer + read vs the fast
-        path.
+        path. ``gram`` (a precomputed gap Gram from ``stage_comm`` chunks)
+        skips the column contraction — the overlap path.
 
         Requires (true of every lowering) that all worker rows of T share
         one weight vector w, so d_m = x_m - mean = (e_m - u)^T g.
@@ -257,8 +281,10 @@ class ConsensusEngine:
         # hard pull) and the subtraction of nearby values is exact, so a
         # degenerate gap is a true zero, matching the tree path's d = x - a
         tx = T @ flat
-        g = tx - flat
-        Gg = self._colsum(g @ g.T)
+        Gg = gram
+        if Gg is None:
+            g = tx - flat
+            Gg = self._colsum(g @ g.T)
         r = jnp.sqrt(jnp.maximum(jnp.diagonal(Gg), 0.0))
         coef = c0 + c1 / jnp.maximum(r, self.eps)
         new = tx + (1.0 - coef)[:, None] * (flat - tx)
@@ -271,7 +297,7 @@ class ConsensusEngine:
         post = jnp.mean(jnp.sqrt(self.sq_forms(Gg, V_post)[:M]))
         return new, r, pre, post
 
-    def stage(self, flat, T, c0, c1):
+    def stage(self, flat, T, c0, c1, *, gram=None):
         """One fused consensus stage.
 
         Per row i: ``r_i = ||x_i - T_i x||``, ``coef_i = c0_i + c1_i /
@@ -284,6 +310,12 @@ class ConsensusEngine:
         divergence from the tree oracle, transient and geometrically
         escaped). ``precise=True``: exact gap-space stages. Kernel path:
         one two-phase ``pallas_call``, block-centered Gram, exact.
+
+        ``gram`` (the summed ``stage_comm`` chunks, mode-matched) skips
+        the column contraction entirely: only the (R, R) coefficient math
+        and the mixing GEMM/kernel run — the round-boundary epilogue of
+        the double-buffered overlap, whose gather/psum already happened
+        mid-scan (DESIGN.md §Overlap).
         """
         R, M = self.layout.R, self.layout.M
         eye = jnp.eye(R, dtype=jnp.float32)
@@ -292,7 +324,13 @@ class ConsensusEngine:
 
         if self.use_kernel:
             from repro.kernels.pullpush import pullpush as pk
-            if self.shard is not None and self.shard.col_axes:
+            if gram is not None:
+                # gather-free epilogue: coef from the psum-completed Gram,
+                # one mixing kernel pass (kernels.pullpush.mix_from_gram)
+                new, r, G = pk.mix_from_gram(
+                    flat, T, c0, c1, gram, eps=self.eps,
+                    block_cols=self.block_cols, interpret=self.interpret)
+            elif self.shard is not None and self.shard.col_axes:
                 # column shard: partial-Gram kernel + host-side psum
                 # epilogue + mixing kernel (pullpush.fused_round_sharded)
                 new, r, G = pk.fused_round_sharded(
@@ -309,9 +347,9 @@ class ConsensusEngine:
             return new, r, pre, post
 
         if self.precise:
-            return self._gap_stage(flat, T, c0, c1)
+            return self._gap_stage(flat, T, c0, c1, gram=gram)
 
-        G = self.gram(flat)
+        G = self.gram(flat) if gram is None else gram
         # the floor guards coef only — metrics report the (clamped) forms
         floor = GRAM_NOISE_FACTOR * _EPS32 * jnp.max(jnp.diagonal(G))
         r = jnp.sqrt(jnp.maximum(self.sq_forms(G, eye - T), floor))

@@ -1,12 +1,13 @@
 from repro.kernels.pullpush.ops import pullpush_fused
 from repro.kernels.pullpush.pullpush import (
-    apply_update, fused_round, fused_round_sharded, mix_shard, partial_gram,
-    sq_dist,
+    apply_update, fused_round, fused_round_sharded, mix_from_gram, mix_shard,
+    partial_gram, sq_dist,
 )
 from repro.kernels.pullpush.ref import (
     apply_ref, fused_round_ref, pullpush_ref, sq_dist_ref,
 )
 
 __all__ = ["apply_ref", "apply_update", "fused_round", "fused_round_ref",
-           "fused_round_sharded", "mix_shard", "partial_gram",
-           "pullpush_fused", "pullpush_ref", "sq_dist", "sq_dist_ref"]
+           "fused_round_sharded", "mix_from_gram", "mix_shard",
+           "partial_gram", "pullpush_fused", "pullpush_ref", "sq_dist",
+           "sq_dist_ref"]

@@ -342,6 +342,28 @@ def mix_shard(flat, T, coef, *, block_cols=2048, interpret=True):
     return out[:R, :n]
 
 
+def mix_from_gram(flat, T, c0, c1, G, *, eps=1e-12, block_cols=2048,
+                  interpret=True):
+    """Gather-free mixing epilogue: one consensus stage whose column
+    contraction ALREADY happened — ``G`` is a completed (block-centered or
+    plain) Gram, e.g. the psum'd sum of per-chunk ``partial_gram`` calls
+    the double-buffered overlap dispatches mid-scan (one emission per
+    column chunk; chunk boundaries only re-anchor the block centering,
+    which cancels in every zero-sum form). Derives ``r``/``coef`` at trace
+    level from ``G`` and applies the ``mix_shard`` kernel — the only work
+    left at the round boundary. Returns ``(out, r, G)`` like
+    ``fused_round``.
+    """
+    R = flat.shape[0]
+    V = jnp.eye(R, dtype=jnp.float32) - T.astype(jnp.float32)
+    r = jnp.sqrt(jnp.maximum(jnp.sum((V @ G) * V, axis=1), 0.0))
+    coef = (jnp.broadcast_to(jnp.asarray(c0, jnp.float32), (R,))
+            + jnp.asarray(c1, jnp.float32) / jnp.maximum(r, eps))
+    out = mix_shard(flat, T, coef, block_cols=block_cols,
+                    interpret=interpret)
+    return out, r, G
+
+
 def fused_round_sharded(flat, T, c0, c1, *, axis, eps=1e-12,
                         block_cols=2048, interpret=True):
     """``fused_round`` for a column shard under shard_map.

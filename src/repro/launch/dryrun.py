@@ -93,10 +93,15 @@ def _n_workers(mesh, plan):
 # ---------------------------------------------------------------------------
 
 def build_train(arch, shape, mesh, plan, *, ddp=False, tau=4,
-                plan_name="baseline"):
+                plan_name="baseline", overlap="none"):
     cfg = _cfg_for(arch, plan_name, train=True)
     model = build_model(cfg)
-    dcfg = DPPFConfig(tau=tau, consensus="ddp" if ddp else "simple_avg")
+    # the overlapped round needs the flat engine (the stale snapshot is a
+    # flat (R, n) buffer); exact rounds keep the tree engine the committed
+    # records were built with
+    dcfg = DPPFConfig(tau=tau, consensus="ddp" if ddp else "simple_avg",
+                      engine="flat" if overlap != "none" else "tree",
+                      overlap=overlap)
     opt = make_optimizer(
         "sgd", momentum=0.9, weight_decay=1e-3,
         state_dtype="bfloat16" if plan_name in ("opt", "hier_opt")
@@ -128,12 +133,24 @@ def build_train(arch, shape, mesh, plan, *, ddp=False, tau=4,
         state_specs = jax.eval_shape(
             lambda k: init_train_state(model.init, opt, dcfg, M, k),
             jax.random.PRNGKey(0))
-        p_sh = mesh_lib.param_shardings(mesh, state_specs.params, plan,
-                                        stacked=True)
+        if state_specs.engine is not None:
+            # flat engine (overlap runs): the persistent (R, n) view under
+            # the flat-view storage rule
+            p_sh = mesh_lib.flat_view_sharding(
+                mesh, state_specs.params.shape, plan)
+        else:
+            p_sh = mesh_lib.param_shardings(mesh, state_specs.params, plan,
+                                            stacked=True)
+        snap_sh = None
+        if state_specs.snap is not None:
+            # overlap snapshot: a second (R, n) flat buffer, placed like
+            # the view; scalars replicated
+            snap_sh = {"x": p_sh, "losses": NamedSharding(mesh, P()),
+                       "gns": NamedSharding(mesh, P())}
         st_sh = dataclasses.replace(
             state_specs,
             params=p_sh, opt={"mu": p_sh},
-            cstate={}, t=NamedSharding(mesh, P()),
+            cstate={}, t=NamedSharding(mesh, P()), snap=snap_sh,
             round=NamedSharding(mesh, P()))   # clock position: replicated
         batch_specs = specs_lib.input_specs(cfg, shape, plan, "train", M, tau)
         b_sh = mesh_lib.batch_shardings(mesh, batch_specs, plan,
@@ -187,18 +204,20 @@ def build_decode(arch, shape, mesh, plan, plan_name="baseline"):
 # ---------------------------------------------------------------------------
 
 def run_one(arch, shape_name, mesh_kind, *, mode=None, plan_name="baseline",
-            tau=4, out_dir="results/dryrun"):
+            tau=4, out_dir="results/dryrun", overlap="none"):
     shape = INPUT_SHAPES[shape_name]
     multi_pod = mesh_kind == "multi"
     mesh = _mesh_for(plan_name, multi_pod)
     plan = _plan_for(plan_name, multi_pod)
     mode = mode or ("train" if shape.kind == "train" else shape.kind)
+    if overlap != "none" and mode not in ("train",):
+        raise ValueError("--overlap applies to train-mode dry-runs only")
 
     t0 = time.time()
     if mode in ("train", "ddp"):
         fn, args, cfg = build_train(arch, shape, mesh, plan,
                                     ddp=(mode == "ddp"), tau=tau,
-                                    plan_name=plan_name)
+                                    plan_name=plan_name, overlap=overlap)
     elif mode == "prefill":
         fn, args, cfg = build_prefill(arch, shape, mesh, plan, plan_name)
     else:
@@ -245,7 +264,7 @@ def run_one(arch, shape_name, mesh_kind, *, mode=None, plan_name="baseline",
 
     rec = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind, "mode": mode,
-        "plan": plan_name, "chips": chips, "tau": tau,
+        "plan": plan_name, "chips": chips, "tau": tau, "overlap": overlap,
         "n_workers": _n_workers(mesh, plan) if mode in ("train", "ddp") else None,
         "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
         "memory": mem, "cost_raw_xla": cost,
@@ -259,8 +278,17 @@ def run_one(arch, shape_name, mesh_kind, *, mode=None, plan_name="baseline",
         "param_count": cfg.param_count(),
         "active_param_count": cfg.active_param_count(),
     }
+    if mode == "train":
+        # modeled exact/staleness1/doublebuf round time vs the comm/compute
+        # crossover (launch.roofline.overlap_model) — rendered by
+        # roofline_report.py and the EXPERIMENTS.md §Overlap-roofline table
+        rec["overlap_model"] = rf.overlap_model(
+            terms, ana["collective_axis_bytes"],
+            R=_n_workers(mesh, plan), seconds_scale=scale)
     os.makedirs(out_dir, exist_ok=True)
     tag = f"{arch}_{shape_name}_{mesh_kind}_{mode}_{plan_name}"
+    if overlap != "none":
+        tag += f"_{overlap}"
     with open(os.path.join(out_dir, tag + ".json"), "w") as f:
         json.dump(rec, f, indent=1)
     print(f"[OK] {tag}: compile={t_compile:.1f}s "
@@ -281,6 +309,13 @@ def main():
     ap.add_argument("--plan", default="baseline",
                     choices=["baseline", "hier", "seqshard", "opt", "hier_opt"])
     ap.add_argument("--tau", type=int, default=4)
+    ap.add_argument("--overlap", default="none",
+                    choices=["none", "staleness1", "doublebuf"],
+                    help="compile the overlapped round (flat engine) "
+                         "instead of the exact tree round — train-mode "
+                         "combos only; every train record additionally "
+                         "carries the modeled exact/staleness1/doublebuf "
+                         "comparison (overlap_model)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
@@ -288,29 +323,36 @@ def main():
     # round-plan report: the clock every train-mode combo compiles against
     # (DESIGN.md §Round-clock) — tau from the CLI, the dry-run LR budget
     print(RoundClock(total_steps=TRAIN_STEPS, tau=args.tau,
-                     base_lr=TRAIN_LR).plan_table())
+                     base_lr=TRAIN_LR, overlap=args.overlap).plan_table())
     print()
 
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]
     shapes = (list(INPUT_SHAPES) if args.all or not args.shape
               else [args.shape])
+    suffix = f"_{args.overlap}" if args.overlap != "none" else ""
 
     failures = []
     for mk in meshes:
         for a in archs:
             for s in shapes:
                 tag = f"{a}_{s}_{mk}"
+                mode = (args.mode or
+                        ("train" if INPUT_SHAPES[s].kind == "train"
+                         else INPUT_SHAPES[s].kind))
+                if args.overlap != "none" and mode != "train":
+                    print(f"[skip] {tag} (--overlap is train-only)")
+                    continue
                 path = os.path.join(
-                    args.out, f"{a}_{s}_{mk}_"
-                    f"{args.mode or ('train' if INPUT_SHAPES[s].kind == 'train' else INPUT_SHAPES[s].kind)}"
-                    f"_{args.plan}.json")
+                    args.out, f"{a}_{s}_{mk}_{mode}_{args.plan}"
+                    f"{suffix}.json")
                 if os.path.exists(path):
                     print(f"[skip] {tag} (cached)")
                     continue
                 try:
                     run_one(a, s, mk, mode=args.mode, plan_name=args.plan,
-                            tau=args.tau, out_dir=args.out)
+                            tau=args.tau, out_dir=args.out,
+                            overlap=args.overlap)
                 except Exception as e:
                     failures.append((tag, repr(e)))
                     print(f"[FAIL] {tag}: {e}")

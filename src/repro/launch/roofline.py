@@ -289,6 +289,51 @@ def roofline(flops, bytes_accessed, coll, *, seconds_scale=1.0):
     return terms
 
 
+def overlap_model(terms, axis_bytes, *, R=8, seconds_scale=1.0):
+    """Modeled round time per overlap mode against the comm/compute
+    crossover (DESIGN.md §Overlap).
+
+    The consensus traffic is the worker-axis ("data") collective payload:
+    the worker-row all-gather (O(R x n_local) bytes) plus the (R, R)
+    partial-Gram psum. Tensor-parallel ("model"-axis) collectives fire
+    INSIDE the local steps and are serial with compute in every mode.
+    Per round, with ``work = compute_s + memory_s`` the overlappable
+    window:
+
+    * ``exact``      — all consensus traffic lands serially at the
+      boundary:          ``work + model_s + data_s``
+    * ``staleness1`` — the stale (R, R) psum hides behind the scan, but
+      the FRESH worker-row gather (the delta is applied to the gathered
+      view) stays on the boundary critical path:
+                         ``work + model_s + max(data_s - psum_s, 0)
+                          + max(psum_s - work, 0)``
+    * ``doublebuf``  — gather AND psum belong to the round-(k-1) snapshot
+      and dispatch chunk-by-chunk under the scan; the boundary is local:
+                         ``work + model_s + max(data_s - work, 0)``
+
+    ``crossover = data_s / work``: below 1 the double-buffered round hides
+    its entire consensus cost; above 1 the round is communication-bound
+    and hiding saturates at the compute window. ``psum_s`` uses the
+    engine's (R, R) fp32 payload.
+    """
+    work = terms["compute_s"] + terms["memory_s"]
+    model_s = axis_bytes.get("model", 0.0) / ICI_BW * seconds_scale
+    data_s = (axis_bytes.get("data", 0.0)
+              + axis_bytes.get("mixed", 0.0)
+              + axis_bytes.get("unknown", 0.0)) / ICI_BW * seconds_scale
+    psum_s = min(R * R * 4 / ICI_BW * seconds_scale, data_s)
+    rows = {
+        "exact_s": work + model_s + data_s,
+        "staleness1_s": (work + model_s + max(data_s - psum_s, 0.0)
+                         + max(psum_s - work, 0.0)),
+        "doublebuf_s": work + model_s + max(data_s - work, 0.0),
+    }
+    rows["crossover"] = data_s / work if work > 0 else float("inf")
+    rows["overlap_gain"] = (rows["exact_s"] / rows["doublebuf_s"]
+                            if rows["doublebuf_s"] > 0 else 1.0)
+    return rows
+
+
 def model_flops(cfg, shape, *, mode: str) -> float:
     """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode D = batch
     tokens (1 new token per sequence). Global, all chips."""

@@ -24,6 +24,7 @@ from repro.train import (
     RoundClock, init_train_state, make_ddp_step, make_round_step,
     make_sharded_round_step, shard_train_state,
 )
+from repro.train.clock import RoundMetricsLogger
 from repro.train.trainer import TrainState, average_params
 
 
@@ -46,11 +47,18 @@ def main(argv=None):
                          "(R, n) view — worker rows plus aux consensus-"
                          "state rows — with fused Gram/mixing round update)")
     ap.add_argument("--overlap", default="none",
-                    choices=["none", "staleness1"],
+                    choices=["none", "staleness1", "doublebuf"],
                     help="staleness1 = apply the consensus computed from "
                          "the previous round's snapshot, hiding the "
-                         "all-reduce behind the tau local steps (flat "
-                         "engine only)")
+                         "all-reduce behind the tau local steps; doublebuf "
+                         "= additionally dispatch the snapshot's worker-"
+                         "row gather + partial-Gram psum in chunks "
+                         "interleaved with the scan, leaving only the mix "
+                         "GEMM at the boundary (flat engine only)")
+    ap.add_argument("--overlap-chunks", type=int, default=4,
+                    help="doublebuf: column chunks the mid-scan snapshot "
+                         "comm splits into (1 = bit-for-bit staleness1 "
+                         "consensus numerics)")
     ap.add_argument("--sharded", action="store_true",
                     help="run the round under shard_map on all local "
                          "devices (launch.mesh.make_flat_engine_mesh; "
@@ -78,6 +86,17 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=8, help="per-worker batch")
     ap.add_argument("--lr", type=float, default=0.3)
+    ap.add_argument("--warmup", type=int, default=0,
+                    help="linear LR warmup steps; the RoundClock samples "
+                         "the FULL schedule (warmup + cosine) — QSR rounds "
+                         "inside the warmup keep the base tau instead of "
+                         "blowing up on the tiny warmup LR")
+    ap.add_argument("--log-every-round", default="", metavar="PATH",
+                    help="write one JSON line of the unified round-metrics "
+                         "dict (consensus_dist/pull_force/push_force/"
+                         "stale, plus the clock position) per round to "
+                         "PATH (train.clock.RoundMetricsLogger; the ddp "
+                         "branch logs per step on its tau=1 clock)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="",
                     help="checkpoint path: final (serving) params are "
@@ -124,16 +143,22 @@ def main(argv=None):
     task = TokenTask(vocab_size=cfg.vocab_size, seq_len=args.seq)
     dcfg = DPPFConfig(alpha=args.alpha, lam=args.lam, tau=args.tau,
                       consensus=args.consensus, engine=args.engine,
-                      overlap=args.overlap, lam_schedule=args.lam_schedule,
+                      overlap=args.overlap,
+                      overlap_chunks=args.overlap_chunks,
+                      lam_schedule=args.lam_schedule,
                       tau_schedule=args.tau_schedule, qsr_beta=args.qsr_beta)
     opt = make_optimizer(args.optimizer, momentum=0.9, weight_decay=1e-3)
     key = jax.random.PRNGKey(args.seed)
 
     # the RoundClock is the single source of truth for step/round
-    # accounting: round plan (incl. the steps % tau remainder and
-    # QSR-adaptive taus), lam_t, and LR position (DESIGN.md §Round-clock)
+    # accounting: round plan (incl. the steps % tau remainder, warmup
+    # rounds, QSR-adaptive taus — stale-LR ruled under overlap), lam_t,
+    # and LR position (DESIGN.md §Round-clock)
     clock = RoundClock.from_config(dcfg, base_lr=args.lr,
-                                   total_steps=args.steps)
+                                   total_steps=args.steps,
+                                   warmup=args.warmup)
+    logger = RoundMetricsLogger(args.log_every_round) \
+        if args.log_every_round else None
 
     t0 = time.time()
     if args.consensus == "ddp":
@@ -148,6 +173,8 @@ def main(argv=None):
                 *[make_lm_batch(task, args.seed, m, s, args.batch, cfg)
                   for m in range(args.workers)])
             state, m = step(state, batch)
+            if logger is not None:   # ddp: per step on the tau=1 clock
+                logger(s, m)
             if s % (args.log_every * args.tau) == 0:
                 print(f"step {s:5d} loss {float(m['train_loss']):.4f}")
         final = state.params
@@ -191,7 +218,7 @@ def main(argv=None):
             # resume happened ABOVE on host arrays, so a checkpoint written
             # under any mesh shape (or none) reshards here — the 2x2x2 ->
             # 8x1 cross-shape resume the tests pin
-            state = shard_train_state(state, mesh, plan)
+            state = shard_train_state(state, mesh, plan, dcfg=dcfg)
             step = jax.jit(make_sharded_round_step(
                 model.loss, opt, dcfg, mesh=mesh, plan=plan, clock=clock,
                 sam_rho=args.sam_rho), donate_argnums=0)
@@ -211,6 +238,8 @@ def main(argv=None):
             batch = make_round_batch(task, args.seed, args.workers, spec.tau,
                                      spec.start, args.batch, cfg)
             state, m = step(state, batch)
+            if logger is not None:
+                logger(spec, m)
             if spec.index % args.log_every == 0:
                 print(f"round {spec.index:4d} (step {int(state.t):5d} "
                       f"tau {spec.tau:3d}) "
@@ -229,6 +258,9 @@ def main(argv=None):
     eval_batch = make_lm_batch(task, args.seed + 999, 0, 10 ** 6,
                                args.batch * args.workers, cfg)
     loss, _ = jax.jit(model.loss)(final, eval_batch)
+    if logger is not None:
+        logger.close()
+        print(f"round metrics -> {args.log_every_round}")
     print(f"eval loss {float(loss):.4f}  wall {time.time() - t0:.1f}s")
     if args.ckpt:
         save_pytree(args.ckpt, final, extra={"steps": args.steps})

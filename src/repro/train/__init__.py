@@ -1,11 +1,14 @@
-from repro.train.clock import TAU_SCHEDULES, RoundClock, RoundSpec
+from repro.train.clock import (
+    OVERLAP_MODES, TAU_SCHEDULES, RoundClock, RoundMetricsLogger, RoundSpec,
+)
 from repro.train.trainer import (
     TrainState, average_params, init_train_state, make_ddp_step,
     make_round_step, make_sharded_round_step, shard_train_state,
     stacked_params,
 )
 
-__all__ = ["TAU_SCHEDULES", "RoundClock", "RoundSpec", "TrainState",
+__all__ = ["OVERLAP_MODES", "TAU_SCHEDULES", "RoundClock",
+           "RoundMetricsLogger", "RoundSpec", "TrainState",
            "average_params", "init_train_state", "make_ddp_step",
            "make_round_step", "make_sharded_round_step", "shard_train_state",
            "stacked_params"]

@@ -36,7 +36,9 @@ The clock position (``TrainState.round``) persists through
 """
 from __future__ import annotations
 
+import json
 import math
+import os
 from dataclasses import dataclass
 from functools import cached_property
 from typing import Tuple
@@ -44,6 +46,7 @@ from typing import Tuple
 from repro.core.schedules import cosine_lr, lam_schedule, qsr_tau
 
 TAU_SCHEDULES = ("fixed", "qsr")
+OVERLAP_MODES = ("none", "staleness1", "doublebuf")
 
 
 @dataclass(frozen=True)
@@ -87,6 +90,13 @@ class RoundClock:
     lam_kind: str = "increasing"     # fixed | increasing | decreasing (§C.2)
     tau_schedule: str = "fixed"      # fixed | qsr (§7.2)
     qsr_beta: float = 0.0            # QSR: tau_t = max(tau, floor((beta/eta)^2))
+    # overlap-aware QSR: with a stale consensus ("staleness1"/"doublebuf",
+    # DESIGN.md §Overlap) round k applies the consensus of round k-1's
+    # iterate, so the QSR period of round k is sized from the LR of the
+    # PREVIOUS round's start — the stale LR — keeping sync frequency
+    # matched to the iterate actually being synchronized. The plan stays a
+    # host-side pure function of the config (static-shaped rounds).
+    overlap: str = "none"
 
     def __post_init__(self):
         # ValueError, not assert: these guard user-facing config plumbing
@@ -104,6 +114,11 @@ class RoundClock:
             if self.base_lr <= 0:
                 raise ValueError("tau_schedule='qsr' adapts tau to the "
                                  "cosine LR and needs base_lr > 0")
+        if self.overlap not in OVERLAP_MODES:
+            raise ValueError(f"unknown overlap mode {self.overlap!r} "
+                             f"(expected one of {OVERLAP_MODES})")
+        if self.warmup < 0:
+            raise ValueError(f"warmup must be >= 0, got {self.warmup}")
 
     @classmethod
     def from_config(cls, dcfg, *, base_lr: float, total_steps: int,
@@ -116,7 +131,8 @@ class RoundClock:
             tau_schedule = "qsr"
         return cls(total_steps=total_steps, tau=dcfg.tau, base_lr=base_lr,
                    warmup=warmup, lam=dcfg.lam, lam_kind=dcfg.lam_schedule,
-                   tau_schedule=tau_schedule, qsr_beta=dcfg.qsr_beta)
+                   tau_schedule=tau_schedule, qsr_beta=dcfg.qsr_beta,
+                   overlap=getattr(dcfg, "overlap", "none"))
 
     # -- round plan ---------------------------------------------------------
 
@@ -128,9 +144,27 @@ class RoundClock:
         rounds, t = [], 0
         while t < self.total_steps:
             if self.tau_schedule == "qsr":
-                eta = _host_cosine_lr(self.base_lr, t, self.total_steps,
-                                      self.warmup)
-                tau_t = qsr_tau(eta, self.tau, self.qsr_beta)
+                if t < self.warmup:
+                    # warmup-aware QSR: the warmup LR is tiny, so the raw
+                    # rule (beta/eta)^2 would blow tau up exactly when the
+                    # model changes fastest — warmup rounds keep the base
+                    # tau (Gu et al. 2024 sync frequently during warmup)
+                    # and never straddle the warmup boundary, so the first
+                    # cosine-ruled round starts AT ``warmup``
+                    tau_t = min(self.tau, self.warmup - t)
+                else:
+                    # overlap-aware QSR: under a stale consensus the round
+                    # applies the previous round's iterate, so its period
+                    # is ruled by the STALE LR — the previous round's
+                    # start (round 0 / the first post-warmup round have no
+                    # stale predecessor and use their own LR)
+                    t_lr = t
+                    if self.overlap != "none" and rounds and \
+                            rounds[-1].start >= self.warmup:
+                        t_lr = rounds[-1].start
+                    eta = _host_cosine_lr(self.base_lr, t_lr,
+                                          self.total_steps, self.warmup)
+                    tau_t = qsr_tau(eta, self.tau, self.qsr_beta)
             else:
                 tau_t = self.tau
             tau_t = min(tau_t, self.total_steps - t)   # never drop remainder
@@ -228,12 +262,16 @@ class RoundClock:
                 "lr_end": round(_host_cosine_lr(
                     self.base_lr, spec.stop - 1, self.total_steps,
                     self.warmup), 6),
+                "warmup": spec.start < self.warmup,
             })
         return {
             "total_steps": self.total_steps,
             "tau_base": self.tau,
             "tau_schedule": self.tau_schedule,
             "qsr_beta": self.qsr_beta,
+            "warmup": self.warmup,
+            "warmup_rounds": sum(1 for r in plan if r["warmup"]),
+            "overlap": self.overlap,
             "rounds": self.total_rounds,
             "fixed_rounds": self.fixed_rounds,
             "allreduces_saved": self.fixed_rounds - self.total_rounds,
@@ -248,10 +286,19 @@ class RoundClock:
         ``max_rows // 2`` rounds."""
         d = self.describe()
         rows = d["plan"]
+        extra = ""
+        if d["warmup"]:
+            extra += (f", warmup {d['warmup']} steps = "
+                      f"{d['warmup_rounds']} rounds")
+        if d["overlap"] != "none":
+            extra += f", overlap {d['overlap']}"
+            if d["tau_schedule"] == "qsr":
+                extra += " (stale-LR QSR)"
         head = [f"round plan: {d['rounds']} rounds over "
                 f"{d['total_steps']} steps (tau_schedule="
                 f"{d['tau_schedule']}, tau {d['tau_min']}..{d['tau_max']}, "
-                f"all-reduces saved vs fixed: {d['allreduces_saved']})",
+                f"all-reduces saved vs fixed: {d['allreduces_saved']}"
+                f"{extra})",
                 "| round | start | tau | lam | lr window |",
                 "|---|---|---|---|---|"]
         if len(rows) > max_rows:
@@ -263,7 +310,53 @@ class RoundClock:
             if r is None:
                 head.append("| ... | | | | |")
                 continue
-            head.append(f"| {r['round']} | {r['start']} | {r['tau']} | "
+            tau_cell = f"{r['tau']} (warm)" if r["warmup"] else f"{r['tau']}"
+            head.append(f"| {r['round']} | {r['start']} | {tau_cell} | "
                         f"{r['lam']:.4f} | {r['lr_start']:.4f} -> "
                         f"{r['lr_end']:.4f} |")
         return "\n".join(head)
+
+
+class RoundMetricsLogger:
+    """Per-round metrics hook: one JSON line per communication round.
+
+    Drivers that iterate ``clock.rounds`` call the logger with the round's
+    ``RoundSpec`` and the unified round-metrics dict every round builder
+    emits (``consensus_dist``/``pre_dist``/``pull_force``/``push_force``/
+    ``train_loss``/``lam_t``/``stale`` — the ddp branch included, where the
+    consensus fields are zeros and the clock is the tau=1 per-step clock;
+    pass a plain step index instead of a spec there). Each line carries the
+    clock position (round, global start step, tau) plus the metrics, so a
+    QSR-adaptive run's log is self-describing. Values are converted via
+    ``float`` — call it OUTSIDE jit (on the returned metrics), never inside
+    a traced function. ``launch/train.py --log-every-round PATH`` wires it.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        self._fh = open(path, "w")
+
+    def __call__(self, spec, metrics: dict):
+        if isinstance(spec, RoundSpec):
+            row = {"round": spec.index, "start": spec.start, "tau": spec.tau}
+        else:   # ddp / per-step drivers: a bare global step index
+            row = {"round": int(spec), "start": int(spec), "tau": 1}
+        for k, v in metrics.items():
+            try:
+                row[k] = float(v)
+            except (TypeError, ValueError):
+                row[k] = str(v)
+        self._fh.write(json.dumps(row) + "\n")
+        self._fh.flush()
+        return row
+
+    def close(self):
+        self._fh.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -23,10 +23,16 @@ Two round-level extensions on top of the flat engine:
   worker axes, columns over its fsdp/model axes; the round's collectives
   are one worker-row all-gather at the round boundary plus the engine's
   (R, R) partial-Gram psum (DESIGN.md §Sharded-execution).
-* ``DPPFConfig.overlap == "staleness1"`` applies the consensus computed
+* ``DPPFConfig.overlap`` runs the two-buffer stale-consensus recursion
+  (DESIGN.md §Overlap): ``"staleness1"`` applies the consensus computed
   from the PREVIOUS round's snapshot (carried in ``TrainState.snap``), so
   the consensus collectives have no data dependence on the current round's
-  local steps and the scheduler hides them behind tau steps of compute.
+  local steps and the scheduler hides them behind tau steps of compute;
+  ``"doublebuf"`` additionally carries the snapshot ROW-SHARDED and
+  dispatches its worker-row gather + stage-1 Gram psum in
+  ``overlap_chunks`` column chunks interleaved with the scan's segments,
+  leaving only coefficient math + the mix GEMM at the round boundary
+  (round 0 fills the pipeline with an EXACT consensus of the fresh view).
 
 Step/round accounting is owned by ``repro.train.clock.RoundClock``
 (DESIGN.md §Round-clock): every builder reads lam_t via
@@ -74,6 +80,20 @@ class TrainState:
 jax.tree_util.register_dataclass(
     TrainState, data_fields=("params", "opt", "cstate", "t", "snap", "round"),
     meta_fields=("engine",))
+
+
+def _chunk_bounds(n: int, k: int):
+    """Split ``range(n)`` into ``k`` contiguous near-equal pieces (host
+    ints; first pieces absorb the remainder). The one copy of the
+    double-buffered overlap's chunk arithmetic — used for both the
+    snapshot's column chunks and the scan's step segments."""
+    base, rem = divmod(n, k)
+    bounds, a = [], 0
+    for i in range(k):
+        b = a + base + (1 if i < rem else 0)
+        bounds.append((a, b))
+        a = b
+    return bounds
 
 
 def _round_index(state: TrainState, dcfg: DPPFConfig):
@@ -154,20 +174,22 @@ def init_train_state(loss_params_init, opt: Optimizer, dcfg: DPPFConfig,
         params = engine.flatten(params)           # the ONE flatten per run
         opt_state = jax.vmap(opt.init)(engine.workers(params))
         cstate = consensus.init_state(dcfg.consensus, params, engine=engine)
-        if getattr(dcfg, "overlap", "none") == "staleness1":
-            # round-0 snapshot: the (degenerate) init fleet. The round
-            # builders gate the first delta off (explicit pipeline bubble),
-            # so round 0 is local steps only and the pipeline fills in one
-            # round. The + 0.0 copy keeps snap and params
+        if getattr(dcfg, "overlap", "none") != "none":
+            # round-0 snapshot: the (degenerate) init fleet. staleness1
+            # gates the first delta off (explicit pipeline bubble, round 0
+            # is local steps only); doublebuf instead runs an EXACT
+            # consensus of the fresh post-scan view in round 0 (pipeline
+            # fill, DESIGN.md §Overlap). Either way the pipeline fills in
+            # one round. The + 0.0 copy keeps snap and params
             # donation-distinct.
             snap = {"x": params + 0.0,
                     "losses": jnp.zeros((n_workers,), jnp.float32),
                     "gns": jnp.ones((n_workers,), jnp.float32)}
     else:
-        if getattr(dcfg, "overlap", "none") == "staleness1":
+        if getattr(dcfg, "overlap", "none") != "none":
             raise ValueError(
-                "overlap='staleness1' requires engine='flat' (the stale "
-                "snapshot is an extra (R, n) flat buffer)")
+                f"overlap={dcfg.overlap!r} requires engine='flat' (the "
+                "stale snapshot is an extra (R, n) flat buffer)")
         opt_state = jax.vmap(opt.init)(params)
         cstate = consensus.init_state(dcfg.consensus, params)
     return TrainState(params=params, opt=opt_state, cstate=cstate,
@@ -193,12 +215,14 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
     if clock is None:
         clock = _legacy_clock(dcfg, base_lr, total_steps, warmup,
                               "make_round_step")
-    overlap = getattr(dcfg, "overlap", "none") == "staleness1"
+    overlap_mode = getattr(dcfg, "overlap", "none")
+    overlap = overlap_mode != "none"
 
     def round_step(state: TrainState, batch):
         engine = state.engine
         if overlap and engine is None:
-            raise ValueError("overlap='staleness1' requires the flat engine")
+            raise ValueError(
+                f"overlap={overlap_mode!r} requires the flat engine")
         if engine is None:
             loss, p0 = loss_fn, state.params
         else:
@@ -219,7 +243,8 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         # off-by-one that skipped round 0 and shifted the whole trajectory)
         round_idx = _round_index(state, dcfg)
         lam_t = clock.lam_at(round_idx)
-        if overlap:
+        stale_flag = jnp.float32(0.0)
+        if overlap_mode == "staleness1":
             # staleness-1: consensus of the PREVIOUS round's snapshot; its
             # collectives have no data dependence on this round's scan, so
             # the scheduler overlaps them with the tau local steps. The
@@ -235,6 +260,46 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             # noise-floor push (engine docstring) — skip the first delta
             live = (state.t > 0).astype(jnp.float32)
             params = params + live * (c_out - snap["x"])
+            stale_flag = live
+        elif overlap_mode == "doublebuf":
+            # double-buffered: the snapshot's stage-1 column contraction is
+            # dispatched in ``overlap_chunks`` pieces with no data
+            # dependence on the scan (under shard_map the matching gather/
+            # psum chunks interleave with the local steps — this builder is
+            # the single-shard reference of the same recursion); the round
+            # boundary runs coefficient math + mixing only. Round 0 is the
+            # pipeline-fill bubble: an EXACT consensus of the fresh q (not
+            # a skipped round — the init snapshot is the collapsed fleet
+            # and carries no information).
+            snap = state.snap
+            cstate = state.cstate
+            stages, _ = consensus.lower_stages(
+                engine, dcfg, lam_t, losses=snap["losses"],
+                grad_norms=snap["gns"])
+            T1 = stages[0][1]
+            n_eff = max(1, min(dcfg.overlap_chunks, engine.layout.n))
+            gram = None
+            for a, b in _chunk_bounds(engine.layout.n, n_eff):
+                part = engine.stage_comm(snap["x"][:, a:b], T1)
+                gram = part if gram is None else gram + part
+            new_snap = {"x": params, "losses": losses[-1], "gns": gns[-1]}
+            q = params
+
+            def _stale(_):
+                c_out, _, m = consensus.apply_round(
+                    snap["x"], dcfg, lam_t, cstate, losses=snap["losses"],
+                    grad_norms=snap["gns"], engine=engine, first_gram=gram)
+                return q + (c_out - snap["x"]), m
+
+            def _bubble(_):
+                new, _, m = consensus.apply_round(
+                    q, dcfg, lam_t, cstate, losses=losses[-1],
+                    grad_norms=gns[-1], engine=engine)
+                return new, m
+
+            params, metrics = jax.lax.cond(state.t > 0, _stale, _bubble,
+                                           None)
+            stale_flag = (state.t > 0).astype(jnp.float32)
         else:
             params, cstate, metrics = consensus.apply_round(
                 params, dcfg, lam_t, state.cstate,
@@ -243,6 +308,7 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         metrics = dict(metrics)
         metrics["train_loss"] = losses.mean()
         metrics["lam_t"] = lam_t
+        metrics["stale"] = stale_flag
         new_state = TrainState(params=params, opt=opt_st, cstate=cstate, t=t,
                                snap=new_snap,
                                round=jnp.asarray(round_idx + 1, jnp.int32),
@@ -296,6 +362,17 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
     divisible sub-group -> replicated with the psum a no-op) when n is not
     divisible. jit with ``donate_argnums=0`` at the callsite, like
     ``make_round_step``.
+
+    With ``dcfg.overlap == "doublebuf"`` the snapshot is carried
+    ROW-SHARDED and the round is split into ``overlap_chunks`` segments:
+    before each segment's local steps, one column chunk of the snapshot's
+    worker-row all-gather and its stage-1 partial-Gram psum are dispatched
+    — neither depends on the scan, so the scheduler hides ALL of the
+    round's heavy communication behind compute; the boundary runs only the
+    (R, R) coefficient math and the column-local mix GEMM (no fresh
+    gather: each device applies its own rows of the delta). Round 0 is
+    the pipeline-fill bubble and applies an EXACT consensus of the fresh
+    view (DESIGN.md §Overlap).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -303,7 +380,9 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
     if clock is None:
         clock = _legacy_clock(dcfg, base_lr, total_steps, warmup,
                               "make_sharded_round_step")
-    overlap = getattr(dcfg, "overlap", "none") == "staleness1"
+    overlap_mode = getattr(dcfg, "overlap", "none")
+    stale1 = overlap_mode == "staleness1"
+    dbuf = overlap_mode == "doublebuf"
     row_axes = tuple(plan.worker_axes)
     sizes = dict(mesh.shape)
     row_size = math.prod(sizes[a] for a in row_axes) if row_axes else 1
@@ -331,6 +410,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         s_engine = dataclasses.replace(engine, shard=ShardedLayout(
             row_axes=row_axes, col_axes=eff_cols, rows=row_size, cols=cols))
         row_e = _axis_entry(row_axes)
+        tau = jnp.shape(jax.tree.leaves(batch)[0])[0]
 
         def leading_dim_spec(leaf, entry, offset=0):
             nd = jnp.ndim(leaf)
@@ -340,17 +420,62 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         def mapped(w_loc, opt_loc, t0, rnd0, b_loc, *rest):
             rest = list(rest)
             aux_loc = rest.pop(0) if aux else None
-            snap_x, snap_l, snap_g = (rest if overlap else (None, None, None))
+            snap_x = snap_aux = snap_l = snap_g = None
+            if stale1:
+                snap_x, snap_l, snap_g = rest
+            elif dbuf:
+                snap_x = rest.pop(0)             # (m_loc, n_loc) row-sharded
+                if aux:
+                    snap_aux = rest.pop(0)       # (aux, n_loc)
+                snap_l, snap_g = rest
 
-            # tau local steps on column-gathered local worker rows
+            # clock position of the round about to mix (pre-scan index —
+            # same off-by-one fix as make_round_step)
+            lam_t = clock.lam_at(rnd0)
+            loss = lambda row, b: loss_fn(engine.unflatten_row(row), b)
             w_full = jax.lax.all_gather(w_loc, eff_cols, axis=1, tiled=True) \
                 if eff_cols else w_loc
-            loss = lambda row, b: loss_fn(engine.unflatten_row(row), b)
-            params, opt_st, t, losses, gns = _scan_local_steps(
-                loss, opt, w_full, opt_loc, t0, b_loc, clock=clock,
-                sam_rho=sam_rho)
 
-            # round boundary: back to own columns, gather worker rows
+            if dbuf:
+                # the tau local steps split into n_eff segments; ahead of
+                # each segment one column chunk of the round-(k-1)
+                # snapshot's worker-row gather + stage-1 contraction psum
+                # is dispatched — no data dependence on the scan, so the
+                # collectives run under the segment's compute
+                stages, _ = consensus.lower_stages(
+                    s_engine, dcfg, lam_t, losses=snap_l, grad_norms=snap_g)
+                T1 = stages[0][1]
+                n_eff = max(1, min(dcfg.overlap_chunks, tau, n_loc))
+                gram, gath = None, []
+                params, opt_st, t = w_full, opt_loc, t0
+                l_parts, g_parts = [], []
+                for (ca, cz), (sa, sz) in zip(_chunk_bounds(n_loc, n_eff),
+                                              _chunk_bounds(tau, n_eff)):
+                    piece = snap_x[:, ca:cz]
+                    if row_size > 1:
+                        piece = jax.lax.all_gather(piece, row_axes, axis=0,
+                                                   tiled=True)
+                    if aux:
+                        piece = jnp.concatenate(
+                            [piece, snap_aux[:, ca:cz]], axis=0)
+                    gath.append(piece)
+                    part = s_engine.stage_comm(piece, T1)
+                    gram = part if gram is None else gram + part
+                    seg = jax.tree.map(lambda l: l[sa:sz], b_loc)
+                    params, opt_st, t, lj, gj = _scan_local_steps(
+                        loss, opt, params, opt_st, t, seg, clock=clock,
+                        sam_rho=sam_rho)
+                    l_parts.append(lj)
+                    g_parts.append(gj)
+                losses = jnp.concatenate(l_parts, axis=0)
+                gns = jnp.concatenate(g_parts, axis=0)
+                s_full = jnp.concatenate(gath, axis=1)    # (R, n_loc)
+            else:
+                params, opt_st, t, losses, gns = _scan_local_steps(
+                    loss, opt, w_full, opt_loc, t0, b_loc, clock=clock,
+                    sam_rho=sam_rho)
+
+            # round boundary: back to own columns
             if eff_cols:
                 c_idx = _lin_index(eff_cols, sizes)
                 q_loc = jax.lax.dynamic_slice_in_dim(
@@ -358,48 +483,99 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             else:
                 q_loc = params
             if row_size > 1:
-                q_rows = jax.lax.all_gather(q_loc, row_axes, axis=0,
-                                            tiled=True)
                 l_last = jax.lax.all_gather(losses[-1], row_axes, tiled=True)
                 g_last = jax.lax.all_gather(gns[-1], row_axes, tiled=True)
             else:
-                q_rows, l_last, g_last = q_loc, losses[-1], gns[-1]
-            X = jnp.concatenate([q_rows, aux_loc], axis=0) if aux else q_rows
+                l_last, g_last = losses[-1], gns[-1]
 
-            # clock position of the round about to mix (pre-scan index —
-            # same off-by-one fix as make_round_step)
-            lam_t = clock.lam_at(rnd0)
-            if overlap:
+            def gather_rows(x_loc):
+                """Own-column worker rows + aux -> the full (R, n_loc)
+                view (THE consensus all-reduce of the paper)."""
+                rows = jax.lax.all_gather(x_loc, row_axes, axis=0,
+                                          tiled=True) if row_size > 1 \
+                    else x_loc
+                return jnp.concatenate([rows, aux_loc], axis=0) if aux \
+                    else rows
+
+            def own_rows(full):
+                """Slice this device's worker rows back out."""
+                if row_size > 1:
+                    return jax.lax.dynamic_slice_in_dim(
+                        full[:M], _lin_index(row_axes, sizes) * m_loc,
+                        m_loc, 0)
+                return full[:M]
+
+            if dbuf:
+                # boundary: coefficient math + mix GEMM only. The delta is
+                # applied shard-locally (own worker rows + aux) — no fresh
+                # row gather; the new snapshot is the row-SHARDED q.
+                def _stale(_):
+                    c_out, _, m = consensus.apply_round(
+                        s_full, dcfg, lam_t, state.cstate, losses=snap_l,
+                        grad_norms=snap_g, engine=s_engine, first_gram=gram)
+                    delta = c_out - s_full
+                    outs = [q_loc + own_rows(delta)]
+                    if aux:
+                        outs.append(aux_loc + delta[M:])
+                    return tuple(outs + [m])
+
+                def _bubble(_):
+                    # round-0 pipeline fill: EXACT consensus of the fresh q
+                    X = gather_rows(q_loc)
+                    newX, _, m = consensus.apply_round(
+                        X, dcfg, lam_t, state.cstate, losses=l_last,
+                        grad_norms=g_last, engine=s_engine)
+                    outs = [own_rows(newX)]
+                    if aux:
+                        outs.append(newX[M:])
+                    return tuple(outs + [m])
+
+                res = jax.lax.cond(t0 > 0, _stale, _bubble, None)
+                new_w = res[0]
+                new_aux = res[1] if aux else None
+                metrics = dict(res[-1])
+                new_snap_x, new_snap_aux = q_loc, aux_loc
+                stale_flag = (t0 > 0).astype(jnp.float32)
+            elif stale1:
+                X = gather_rows(q_loc)
                 c_out, cstate, metrics = consensus.apply_round(
                     snap_x, dcfg, lam_t, state.cstate,
                     losses=snap_l, grad_norms=snap_g, engine=s_engine)
-                new_snap_x = X
+                new_snap_x, new_snap_aux = X, None
                 # round-0 pipeline bubble, as in make_round_step
                 live = (t0 > 0).astype(jnp.float32)
                 newX = X + live * (c_out - snap_x)
+                new_w = own_rows(newX)
+                new_aux = newX[M:] if aux else None
+                metrics = dict(metrics)
+                stale_flag = live
             else:
+                X = gather_rows(q_loc)
                 newX, cstate, metrics = consensus.apply_round(
                     X, dcfg, lam_t, state.cstate,
                     losses=l_last, grad_norms=g_last, engine=s_engine)
-                new_snap_x = None
+                new_snap_x = new_snap_aux = None
+                new_w = own_rows(newX)
+                new_aux = newX[M:] if aux else None
+                metrics = dict(metrics)
+                stale_flag = jnp.float32(0.0)
 
-            # slice own worker rows back out of the mixed view
-            if row_size > 1:
-                new_w = jax.lax.dynamic_slice_in_dim(
-                    newX[:M], _lin_index(row_axes, sizes) * m_loc, m_loc, 0)
-            else:
-                new_w = newX[:M]
             train_loss = losses.mean()
             if row_size > 1:
                 train_loss = jax.lax.pmean(train_loss, row_axes)
-            metrics = dict(metrics)
             metrics["train_loss"] = train_loss
             metrics["lam_t"] = lam_t
+            metrics["stale"] = stale_flag
             outs = [new_w, opt_st, t, rnd0 + 1, metrics]
             if aux:
-                outs.append(newX[M:])
-            if overlap:
+                outs.append(new_aux)
+            if stale1:
                 outs.extend([new_snap_x, l_last, g_last])
+            elif dbuf:
+                outs.append(new_snap_x)
+                if aux:
+                    outs.append(new_snap_aux)
+                outs.extend([l_last, g_last])
             return tuple(outs)
 
         opt_in = jax.tree.map(lambda l: leading_dim_spec(l, row_e), state.opt)
@@ -407,7 +583,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                                 batch)
         metric_out = {k: P() for k in ("consensus_dist", "pre_dist",
                                        "pull_force", "push_force",
-                                       "train_loss", "lam_t")}
+                                       "train_loss", "lam_t", "stale")}
         rnd0 = jnp.asarray(_round_index(state, dcfg), jnp.int32)
         args = [engine.workers(state.params), state.opt, state.t, rnd0,
                 batch]
@@ -417,13 +593,26 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             args.append(state.params[M:])
             in_specs.append(P(None, col_e))
             out_specs.append(P(None, col_e))
-        if overlap:
+        if stale1:
             # snapshot rows are replicated (every column shard needs the
             # full R rows to mix), columns sharded like the live view
             args.extend([state.snap["x"], state.snap["losses"],
                          state.snap["gns"]])
             in_specs.extend([P(None, col_e), P(), P()])
             out_specs.extend([P(None, col_e), P(), P()])
+        elif dbuf:
+            # the snapshot enters ROW-SHARDED (its worker-row gather is the
+            # comm the next round hides mid-scan); aux rows columns-only
+            args.append(state.snap["x"][:M])
+            in_specs.append(P(row_e, col_e))
+            out_specs.append(P(row_e, col_e))
+            if aux:
+                args.append(state.snap["x"][M:])
+                in_specs.append(P(None, col_e))
+                out_specs.append(P(None, col_e))
+            args.extend([state.snap["losses"], state.snap["gns"]])
+            in_specs.extend([P(), P()])
+            out_specs.extend([P(), P()])
 
         res = list(shard_map(
             mapped, mesh=mesh, in_specs=tuple(in_specs),
@@ -432,8 +621,15 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         rest = res[5:]
         params = jnp.concatenate([new_w, rest.pop(0)], axis=0) if aux \
             else new_w
-        snap = {"x": rest[0], "losses": rest[1], "gns": rest[2]} \
-            if overlap else state.snap
+        if stale1:
+            snap = {"x": rest[0], "losses": rest[1], "gns": rest[2]}
+        elif dbuf:
+            sx = rest.pop(0)
+            if aux:
+                sx = jnp.concatenate([sx, rest.pop(0)], axis=0)
+            snap = {"x": sx, "losses": rest[0], "gns": rest[1]}
+        else:
+            snap = state.snap
         new_state = TrainState(params=params, opt=opt_st,
                                cstate=state.cstate, t=t, snap=snap,
                                round=rnd, engine=engine)
@@ -442,11 +638,15 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
     return round_step
 
 
-def shard_train_state(state: TrainState, mesh, plan):
+def shard_train_state(state: TrainState, mesh, plan, *, dcfg=None):
     """Place a flat-engine ``TrainState`` for ``make_sharded_round_step``:
     the (R, n) view under the flat-view rule (`launch.mesh.
-    flat_view_sharding`), optimizer state over the worker axes, the
-    staleness-1 snapshot with replicated rows, scalars replicated."""
+    flat_view_sharding`), optimizer state over the worker axes, scalars
+    replicated. The overlap snapshot defaults to replicated rows (what
+    staleness-1 consumes); pass the run's ``dcfg`` so a doublebuf
+    snapshot is placed ROW-SHARDED up front — the round emits it
+    row-sharded, and a mismatched initial placement costs one silent
+    recompile at round 1 (jit's cache keys include input shardings)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.mesh import flat_col_entry, flat_view_sharding
 
@@ -467,7 +667,14 @@ def shard_train_state(state: TrainState, mesh, plan):
     snap = state.snap
     if snap is not None:
         col_e = flat_col_entry(mesh, snap["x"].shape[1], plan)
-        snap = {"x": put(snap["x"], P(None, col_e)),
+        if getattr(dcfg, "overlap", None) == "doublebuf":
+            # worker rows sharded like the live view (aux rows keep the
+            # flat-view fallback: replicated when they break divisibility)
+            x = jax.device_put(
+                snap["x"], flat_view_sharding(mesh, snap["x"].shape, plan))
+        else:
+            x = put(snap["x"], P(None, col_e))
+        snap = {"x": x,
                 "losses": put(snap["losses"], P()),
                 "gns": put(snap["gns"], P())}
     rnd = put(state.round, P()) if state.round is not None else None
@@ -509,7 +716,15 @@ def make_ddp_step(loss_fn, opt: Optimizer, *,
         params, opt_st = opt.step(state.params, g, state.opt, lr)
         new_state = TrainState(params=params, opt=opt_st, cstate=state.cstate,
                                t=state.t + 1)
-        return new_state, {"train_loss": losses.mean()}
+        # the unified round-metrics schema (consensus.py::_metrics + the
+        # trainer keys), so per-round loggers see one stable dict from
+        # every branch; DDP's single replica has no worker spread and no
+        # stale consensus — the consensus fields are true zeros
+        zero = jnp.float32(0.0)
+        return new_state, {"train_loss": losses.mean(),
+                           "consensus_dist": zero, "pre_dist": zero,
+                           "pull_force": zero, "push_force": zero,
+                           "lam_t": zero, "stale": zero}
 
     return step
 

@@ -35,12 +35,26 @@ def main():
                   "DPPFConfig unknown tau schedule")
     expect_raises(ValueError, lambda: DPPFConfig(tau_schedule="qsr"),
                   "DPPFConfig qsr without beta")
+    expect_raises(ValueError, lambda: DPPFConfig(overlap="bogus"),
+                  "DPPFConfig unknown overlap mode")
+    expect_raises(ValueError,
+                  lambda: DPPFConfig(engine="flat", overlap="doublebuf",
+                                     overlap_chunks=0),
+                  "DPPFConfig overlap_chunks < 1")
+    expect_raises(ValueError, lambda: DPPFConfig(overlap="doublebuf"),
+                  "DPPFConfig doublebuf on tree engine")
 
     from repro.train import RoundClock
     expect_raises(ValueError,
                   lambda: RoundClock(total_steps=8, tau=4,
                                      tau_schedule="qsr", qsr_beta=0.0),
                   "RoundClock qsr without beta")
+    expect_raises(ValueError,
+                  lambda: RoundClock(total_steps=8, tau=4, overlap="bogus"),
+                  "RoundClock unknown overlap mode")
+    expect_raises(ValueError,
+                  lambda: RoundClock(total_steps=8, tau=4, warmup=-1),
+                  "RoundClock negative warmup")
 
     from repro.core import consensus
     import jax.numpy as jnp

@@ -98,9 +98,75 @@ def test_plan_table_renders_and_elides():
     assert "| 0 | 0 | 4 |" in elided and "| 99 | 396 | 4 |" in elided
 
 
+def test_qsr_warmup_rounds_keep_base_tau():
+    """Warmup-aware QSR: the plan samples the FULL LR schedule. Rounds
+    starting inside the warmup keep the base tau (the raw rule
+    (beta/eta)^2 on the tiny warmup LR would blow tau up exactly when the
+    model changes fastest) and never straddle the warmup boundary; the
+    cosine-ruled plan takes over at ``warmup``. describe()/plan_table()
+    mark the warmup rounds."""
+    clock = RoundClock(total_steps=64, tau=4, base_lr=0.3, warmup=10,
+                       tau_schedule="qsr", qsr_beta=0.4)
+    taus = clock.taus()
+    assert sum(taus) == 64
+    # warmup covers steps 0..9: rounds (0,0,4), (1,4,4), (2,8,2) — the
+    # third round is clipped at the boundary, NOT a huge QSR round
+    assert [(s.start, s.tau) for s in clock.rounds[:3]] == [
+        (0, 4), (4, 4), (8, 2)]
+    assert clock.rounds[3].start == 10
+    # without the warmup guard, eta(0) = 0 would still fall back to tau
+    # but eta(1) ~ 0.03 gives (0.4/0.03)^2 ~ 178 — the guard is what
+    # keeps every warmup-resident round at tau_base
+    d = clock.describe()
+    assert d["warmup"] == 10 and d["warmup_rounds"] == 3
+    assert [r["warmup"] for r in d["plan"][:4]] == [True, True, True, False]
+    table = clock.plan_table()
+    assert "(warm)" in table and "warmup 10 steps = 3 rounds" in table
+    # zero-warmup clocks render without the marker (back-compat)
+    plain = RoundClock(total_steps=10, tau=4, base_lr=0.1)
+    assert "(warm)" not in plain.plan_table()
+    assert "warmup" not in plain.plan_table()
+
+
+def test_qsr_overlap_uses_stale_lr():
+    """Overlap-aware QSR: with a stale consensus, round k applies round
+    k-1's iterate, so its tau is ruled by the PREVIOUS round's start LR.
+    The plan stays host-static, covers every step, and lags the exact
+    plan by exactly one round in its tau growth."""
+    exact = RoundClock(total_steps=64, tau=4, base_lr=0.3,
+                       tau_schedule="qsr", qsr_beta=0.4)
+    for mode in ("staleness1", "doublebuf"):
+        stale = RoundClock(total_steps=64, tau=4, base_lr=0.3,
+                           tau_schedule="qsr", qsr_beta=0.4, overlap=mode)
+        assert sum(stale.taus()) == 64
+        assert stale.describe()["overlap"] == mode
+        # the exact plan (docstring example) grows tau at step 32 (7) and
+        # step 39 (16); the stale plan sizes those rounds from the
+        # previous round's LR, so growth arrives one round later and the
+        # stale plan pays at least as many rounds
+        assert stale.total_rounds >= exact.total_rounds
+        for spec, prev in zip(stale.rounds[1:], stale.rounds):
+            from repro.core.schedules import qsr_tau
+            from repro.train.clock import _host_cosine_lr
+            eta_prev = _host_cosine_lr(0.3, prev.start, 64, 0)
+            want = min(qsr_tau(eta_prev, 4, 0.4), 64 - spec.start)
+            assert spec.tau == want, (spec, want)
+    # overlap="none" keeps the pinned worked example untouched
+    assert exact.taus() == (4, 4, 4, 4, 4, 4, 4, 4, 7, 16, 9)
+    # from_config plumbs the overlap mode through
+    dcfg = DPPFConfig(tau=4, engine="flat", overlap="doublebuf",
+                      tau_schedule="qsr", qsr_beta=0.4)
+    c = RoundClock.from_config(dcfg, base_lr=0.3, total_steps=64)
+    assert c.overlap == "doublebuf"
+
+
 def test_round_plan_validation():
     with pytest.raises(ValueError, match="tau schedule"):
         RoundClock(total_steps=8, tau=4, tau_schedule="bogus")
+    with pytest.raises(ValueError, match="overlap"):
+        RoundClock(total_steps=8, tau=4, overlap="bogus")
+    with pytest.raises(ValueError, match="warmup"):
+        RoundClock(total_steps=8, tau=4, warmup=-2)
     with pytest.raises(ValueError, match="qsr_beta"):
         RoundClock(total_steps=8, tau=4, tau_schedule="qsr")
     with pytest.raises(ValueError, match="base_lr"):
@@ -308,6 +374,67 @@ def test_launcher_cli_qsr_smoke():
                  "2", "--lr", "0.3", "--tau-schedule", "qsr", "--qsr-beta",
                  "0.35"])
     assert np.isfinite(loss)
+
+
+# ---------------------------------------------------------------------------
+# per-round metrics logging hook (RoundMetricsLogger + --log-every-round)
+# ---------------------------------------------------------------------------
+
+def test_round_metrics_logger_jsonl(tmp_path):
+    """The clock-driven hook: one JSON line per round carrying the clock
+    position + the unified metrics dict; bare-int specs (the ddp per-step
+    clock) log as tau=1 rows."""
+    import json
+    from repro.train import RoundMetricsLogger, RoundSpec
+    path = str(tmp_path / "rounds.jsonl")
+    with RoundMetricsLogger(path) as log:
+        row = log(RoundSpec(index=0, start=0, tau=4),
+                  {"consensus_dist": jnp.float32(1.5), "stale": 0.0,
+                   "note": "x"})
+        assert row == {"round": 0, "start": 0, "tau": 4,
+                       "consensus_dist": 1.5, "stale": 0.0, "note": "x"}
+        log(3, {"train_loss": 2.0})
+    lines = [json.loads(l) for l in open(path)]
+    assert len(lines) == 2
+    assert lines[0]["tau"] == 4 and lines[0]["consensus_dist"] == 1.5
+    assert lines[1] == {"round": 3, "start": 3, "tau": 1, "train_loss": 2.0}
+
+
+def test_launcher_log_every_round_jsonl(tmp_path):
+    """--log-every-round through the real launcher: one line per plan
+    round with the unified schema (stale flag included) for a doublebuf
+    run, and one line per STEP for the ddp branch."""
+    import json
+    from repro.launch.train import main
+    path = str(tmp_path / "rounds.jsonl")
+    loss = main(["--arch", "yi-6b", "--smoke", "--workers", "2",
+                 "--tau", "4", "--steps", "10", "--seq", "16", "--batch",
+                 "2", "--lr", "0.3", "--overlap", "doublebuf",
+                 "--overlap-chunks", "2", "--log-every-round", path])
+    assert np.isfinite(loss)
+    rows = [json.loads(l) for l in open(path)]
+    clock = RoundClock(total_steps=10, tau=4, base_lr=0.3,
+                       overlap="doublebuf")
+    assert len(rows) == clock.total_rounds
+    for want, got in zip(clock.rounds, rows):
+        assert (got["round"], got["start"], got["tau"]) == (
+            want.index, want.start, want.tau)
+        for k in ("consensus_dist", "pre_dist", "pull_force", "push_force",
+                  "train_loss", "lam_t", "stale"):
+            assert k in got, k
+    # the bubble round is exact (stale 0), the steady state stale
+    assert rows[0]["stale"] == 0.0
+    assert all(r["stale"] == 1.0 for r in rows[1:])
+
+    ddp_path = str(tmp_path / "ddp.jsonl")
+    loss = main(["--arch", "yi-6b", "--smoke", "--workers", "2",
+                 "--consensus", "ddp", "--steps", "3", "--seq", "16",
+                 "--batch", "2", "--log-every-round", ddp_path])
+    assert np.isfinite(loss)
+    rows = [json.loads(l) for l in open(ddp_path)]
+    assert len(rows) == 3 and all(r["tau"] == 1 for r in rows)
+    assert all(r["stale"] == 0.0 and r["consensus_dist"] == 0.0
+               for r in rows)
 
 
 # ---------------------------------------------------------------------------
