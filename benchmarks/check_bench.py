@@ -1,6 +1,6 @@
 """Compare freshly generated bench JSONs (``BENCH_roundclock.json``,
-``BENCH_overlap.json``) against their committed baselines (ROADMAP
-bench-tracking item).
+``BENCH_overlap.json``, ``BENCH_serving.json``) against their committed
+baselines (ROADMAP bench-tracking item).
 
 Two classes of fields:
 
@@ -32,7 +32,10 @@ import json
 import os
 import sys
 
-TIMING_KEYS = ("wall_s", "speedup", "flat_vs_hier")
+TIMING_KEYS = ("wall_s", "speedup", "flat_vs_hier",
+               # serving bench (BENCH_serving.json): throughput/latency are
+               # host-relative; steps/occupancy stay structural
+               "tok_s", "ttft_ms", "compile_s")
 TIMING_PREFIXES = ("us_", "speedup_")
 # environment fields: allowed to differ, reported only
 INFO_KEYS = ("backend",)

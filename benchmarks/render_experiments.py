@@ -226,6 +226,68 @@ def bench_section():
     return "\n".join(out)
 
 
+def serving_section():
+    """Render the committed BENCH_serving.json baseline: continuous vs
+    static batching (structural step/occupancy ordering) and the
+    prefill-vs-decode serving roofline rows."""
+    path = os.path.join(ROOT, "BENCH_serving.json")
+    if not os.path.exists(path):
+        return ("*(`BENCH_serving.json` not committed yet — run "
+                "`PYTHONPATH=src:. python benchmarks/bench_serving.py "
+                "--smoke` and commit it.)*")
+    with open(path) as f:
+        bench = json.load(f)
+    s = bench["serving"]
+    rl = bench["roofline"]
+    shape = rl["shape"]
+    out = [
+        "Committed baseline: `BENCH_serving.json` (regenerated by the CI "
+        "serving smoke; `benchmarks/check_bench.py` gates the structural "
+        "fields — step counts, occupancy, the continuous >= static "
+        "ordering, roofline rows — and reports tok/s / TTFT as timing "
+        "deltas).",
+        "",
+        f"* `{s['arch']}`, {s['max_slots']} slots, chunk {s['chunk']}, "
+        f"buf {s['buf_len']}: the mixed trace ({len(s['trace_lens'])} "
+        f"requests, prompts {min(s['trace_lens'])}-{max(s['trace_lens'])}, "
+        f"budgets {min(s['trace_new'])}-{max(s['trace_new'])}) runs the "
+        f"SAME compiled decode step under both schedulers.",
+        f"* **continuous batching: {s['continuous']['steps']} steps at "
+        f"{s['continuous']['occupancy']:.0%} occupancy vs static "
+        f"{s['static']['steps']} steps at {s['static']['occupancy']:.0%}** "
+        f"— {s['steps_saved_pct']}% device steps saved "
+        f"(`continuous_ge_static` is the structural gate; wall speedup is "
+        f"a timing field).",
+        "",
+        f"Prefill-vs-decode roofline (TPU v5e model, {shape['max_slots']} "
+        f"slots, chunk {shape['chunk']}, buf {shape['buf_len']}; per-slot "
+        f"state bytes MEASURED from the `make_state` pytree via "
+        f"`jax.eval_shape` — `launch/roofline.py::serving_model`):",
+        "",
+        "| arch | state GB/slot | decode bound | decode tok/s | prefill "
+        "bound | prefill tok/s | prefill tokens per decode step |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for arch, row in sorted(rl.items()):
+        if arch == "shape":
+            continue
+        out.append(
+            f"| {arch} | {row['state_bytes_per_slot']/1e9:.2f} | "
+            f"{row['decode_bound']} | {row['decode_tok_s']} | "
+            f"{row['prefill_bound']} | {row['prefill_tok_s']} | "
+            f"{row['prefill_tokens_per_decode_step']} |")
+    out += [
+        "",
+        "Decode streams every live parameter plus each slot's cache per "
+        "token (memory-bound until `crossover_slots`); a prefill chunk is "
+        "compute-dense. The last column is the admission-packing budget: "
+        "that many chunked-prefill tokens cost one decode step, so "
+        "admitting mid-decode is roofline-free below it (DESIGN.md "
+        "§Serving).",
+    ]
+    return "\n".join(out)
+
+
 MISSING_DRYRUN = (
     "*(dry-run records not present — populate `results/dryrun/` with "
     "`PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both` "
@@ -268,6 +330,11 @@ def render() -> str:
         "## Round-clock / engine benchmarks",
         "",
         bench_section(),
+        "",
+        "## Serving — continuous batching vs static, prefill/decode "
+        "roofline",
+        "",
+        serving_section(),
         "",
         "## Dry-run — single-pod 16x16 (256 chips), baseline plan",
         "",

@@ -1,18 +1,31 @@
-"""Batched serving example: prefill a batch of prompts through the KV-cache
-engine and decode greedily — full-cache and sliding-window (long-context)
-variants on the gemma2 family (native local/global attention).
+"""Continuous-batching serving example: stream mixed-length requests
+through the SlotEngine — full-cache, sliding-window ring-buffer
+(long-context), sampled, and recurrent-state (attention-free) variants.
+
+Each run prints compile time separately from warm throughput, plus the
+per-lane compile counts (all 1 after warmup: admissions/evictions never
+retrace).
 
   PYTHONPATH=src python examples/serve_decode.py
 """
 from repro.launch.serve import main
 
 if __name__ == "__main__":
-    print("== full cache ==")
-    main(["--arch", "gemma2-2b", "--smoke", "--batch", "4",
-          "--prompt-len", "64", "--new-tokens", "16"])
-    print("\n== sliding-window ring buffer (sub-quadratic long-context) ==")
-    main(["--arch", "gemma2-2b", "--smoke", "--batch", "4",
-          "--prompt-len", "64", "--new-tokens", "16", "--window", "64"])
+    print("== continuous batching, full cache ==")
+    main(["--arch", "gemma2-2b", "--smoke", "--requests", "6",
+          "--max-slots", "3", "--prompt-len", "24", "--new-tokens", "12"])
+    print("\n== static-batching baseline (admission barrier) ==")
+    main(["--arch", "gemma2-2b", "--smoke", "--requests", "6",
+          "--max-slots", "3", "--prompt-len", "24", "--new-tokens", "12",
+          "--static"])
+    print("\n== sliding-window ring buffer (prompts stream through) ==")
+    main(["--arch", "gemma2-2b", "--smoke", "--requests", "4",
+          "--max-slots", "2", "--prompt-len", "24", "--new-tokens", "8",
+          "--window", "32", "--chunk", "8", "--buf-len", "48"])
+    print("\n== fused sampling (temperature + top-k + top-p in-compile) ==")
+    main(["--arch", "gemma2-2b", "--smoke", "--requests", "4",
+          "--max-slots", "2", "--prompt-len", "16", "--new-tokens", "8",
+          "--temp", "0.8", "--topk", "40", "--topp", "0.95"])
     print("\n== recurrent-state serving (attention-free xLSTM) ==")
-    main(["--arch", "xlstm-350m", "--smoke", "--batch", "4",
-          "--prompt-len", "64", "--new-tokens", "16"])
+    main(["--arch", "xlstm-350m", "--smoke", "--requests", "4",
+          "--max-slots", "2", "--prompt-len", "24", "--new-tokens", "8"])

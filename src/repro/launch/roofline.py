@@ -348,6 +348,57 @@ def model_flops(cfg, shape, *, mode: str) -> float:
     return 2.0 * n * tokens
 
 
+def serving_model(cfg, *, max_slots: int, chunk: int,
+                  state_bytes_per_slot: float, dtype_bytes: int = 2):
+    """Prefill-vs-decode roofline for the continuous-batching engine
+    (DESIGN.md §Serving).
+
+    Decode is the memory-bound regime: one token per active slot reads
+    EVERY live parameter plus each slot's decode state (read + write), so
+    arithmetic intensity grows with slot occupancy and the engine only
+    turns compute-bound past ``crossover_slots``. A prefill chunk is the
+    compute-bound regime: C tokens of one request against one slot's
+    state. ``prefill_tokens_per_decode_step`` — how many chunked-prefill
+    tokens cost the same as ONE full decode step — is the admission-
+    packing guidance: below it, admitting mid-decode is (roofline-)free.
+
+    ``state_bytes_per_slot`` must be MEASURED from a blank request state
+    pytree (benchmarks/bench_serving.py does), not guessed from shapes.
+    Pure arithmetic — structural for check_bench.
+    """
+    if max_slots < 1:
+        raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+    if chunk < 1:
+        raise ValueError(f"chunk must be >= 1, got {chunk}")
+    n_act = cfg.active_param_count()
+    param_bytes = cfg.param_count() * dtype_bytes
+
+    dec_compute = 2.0 * n_act * max_slots / PEAK_FLOPS
+    dec_memory = (param_bytes + 2.0 * max_slots * state_bytes_per_slot) / HBM_BW
+    decode_s = max(dec_compute, dec_memory)
+
+    pre_compute = 2.0 * n_act * chunk / PEAK_FLOPS
+    pre_memory = (param_bytes + 2.0 * state_bytes_per_slot) / HBM_BW
+    prefill_s = max(pre_compute, pre_memory)
+
+    # slots needed before a decode step stops being a parameter stream
+    denom = 2.0 * n_act / PEAK_FLOPS - 2.0 * state_bytes_per_slot / HBM_BW
+    crossover = (param_bytes / HBM_BW) / denom if denom > 0 else float("inf")
+
+    return {
+        "params_bytes": float(param_bytes),
+        "state_bytes_per_slot": float(state_bytes_per_slot),
+        "decode_s": decode_s,
+        "decode_bound": "compute" if dec_compute >= dec_memory else "memory",
+        "decode_tok_s": max_slots / decode_s,
+        "prefill_s": prefill_s,
+        "prefill_bound": "compute" if pre_compute >= pre_memory else "memory",
+        "prefill_tok_s": chunk / prefill_s,
+        "crossover_slots": crossover,
+        "prefill_tokens_per_decode_step": decode_s / (prefill_s / chunk),
+    }
+
+
 # retained for backward compatibility with simple parsing callers
 def collective_bytes(hlo_text: str):
     return analyze_hlo(hlo_text)["collectives"]

@@ -152,10 +152,22 @@ def init_cache(batch, n_kv, buf_len, head_dim, dtype):
 
 def cache_update(cache, k_new, v_new, index):
     """Write k/v for ``k_new.shape[1]`` tokens starting at absolute position
-    ``index`` into the (possibly ring) buffer. Returns the updated cache."""
+    ``index`` into the (possibly ring) buffer. Returns the updated cache.
+
+    Invariant: position ``p`` always lives in slot ``p % buf`` — single-token
+    decode, chunked-prefill streaming, and full prefill all agree on the
+    layout, so a chunk write that crosses the ring seam wraps instead of
+    clamping, and a later decode step overwrites exactly the slot whose
+    position expired."""
     buf = cache["k"].shape[1]
     S = k_new.shape[1]
-    if S == buf:  # prefill exactly fills buffer
+    if S > buf:
+        # ValueError, not assert: serving-facing path, must survive -O
+        raise ValueError(
+            f"cache_update: {S}-token write exceeds buf_len {buf} — stream "
+            f"the prompt in chunks of at most buf_len")
+    if S == buf and type(index) is int and index % buf == 0:
+        # prefill exactly fills the buffer (slot i == pos index+i mod buf)
         pos = index + jnp.arange(buf, dtype=jnp.int32)
         return {"k": k_new.astype(cache["k"].dtype),
                 "v": v_new.astype(cache["v"].dtype), "pos": pos}
@@ -168,15 +180,13 @@ def cache_update(cache, k_new, v_new, index):
         pos = jax.lax.dynamic_update_slice(cache["pos"],
                                            jnp.asarray([index], jnp.int32), (slot,))
         return {"k": k, "v": v, "pos": pos}
-    # general strided write (prefill shorter than buffer)
-    slot = jnp.mod(index, buf)
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, slot, 0, 0))
-    pos = jax.lax.dynamic_update_slice(
-        cache["pos"], index + jnp.arange(S, dtype=jnp.int32), (slot,))
-    return {"k": k, "v": v, "pos": pos}
+    # general chunk write: scatter at mod positions (wrap-safe; the S
+    # positions are distinct because S <= buf)
+    pos = index + jnp.arange(S, dtype=jnp.int32)
+    slots = jnp.mod(pos, buf)
+    k = cache["k"].at[:, slots].set(k_new.astype(cache["k"].dtype))
+    v = cache["v"].at[:, slots].set(v_new.astype(cache["v"].dtype))
+    return {"k": k, "v": v, "pos": cache["pos"].at[slots].set(pos)}
 
 
 __all__ = [

@@ -64,7 +64,7 @@ def encode(cfg, params, enc_in):
     return rms_norm(x, params["enc_norm"], cfg.norm_eps)
 
 
-def _dec_block(p, x, cfg, cross_k, cross_v, cache, index):
+def _dec_block(p, x, cfg, cross_k, cross_v, cache, index, window=0):
     B, S, _ = x.shape
     h = rms_norm(x, p["ln1"], cfg.norm_eps)
     q, k, v = attn.qkv_proj(p["attn"], h, cfg.n_heads, cfg.n_kv_heads,
@@ -78,7 +78,7 @@ def _dec_block(p, x, cfg, cross_k, cross_v, cache, index):
     else:
         cache = attn.cache_update(cache, k, v, index)
         o = attn.attend(q, cache["k"], cache["v"], q_pos=pos,
-                        kv_pos=cache["pos"], causal=True)
+                        kv_pos=cache["pos"], causal=True, window=window)
     x = x + attn.out_proj(p["attn"], o)
 
     hx = rms_norm(x, p["lnx"], cfg.norm_eps)
@@ -99,9 +99,12 @@ def _cross_kv(p, enc_out, cfg):
     return k, v
 
 
-def decode_stack(cfg, params, x, enc_out=None, states=None, index=0):
+def decode_stack(cfg, params, x, enc_out=None, states=None, index=0,
+                 window=0):
     """Run the decoder stack. states: None (train) or
-    {"self": stacked cache, "ck": (L,B,F,nkv,hd), "cv": ...}."""
+    {"self": stacked cache, "ck": (L,B,F,nkv,hd), "cv": ...}. ``window``
+    bands the cached self-attention (serving ring buffer); cross-attention
+    always sees every encoder frame."""
     if states is None:
         def body(h, p):
             ck, cv = _cross_kv(p, enc_out, cfg)
@@ -112,7 +115,7 @@ def decode_stack(cfg, params, x, enc_out=None, states=None, index=0):
 
     def body(h, xs):
         p, cache, ck, cv = xs
-        h, cache = _dec_block(p, h, cfg, ck, cv, cache, index)
+        h, cache = _dec_block(p, h, cfg, ck, cv, cache, index, window=window)
         return h, cache
 
     x, self_cache = jax.lax.scan(
@@ -129,23 +132,43 @@ def encdec_loss(cfg, params, batch):
     return loss, {"loss": loss, "aux": jnp.float32(0.0)}
 
 
-def encdec_prefill(cfg, params, tokens, enc_in, buf_len, serve_window=0):
+def encdec_make_state(cfg, params, batch_size, enc_in, buf_len,
+                      serve_window=0):
+    """Blank decoder states primed with the request's encoder pass: the
+    cross k/v lanes are computed ONCE here and ride in the state pytree
+    (serving slot insertion carries them per slot). Returns
+    (states, start index 0)."""
     del serve_window
     dtype = jnp.dtype(cfg.dtype)
     enc_out = encode(cfg, params, enc_in)
-    B = tokens.shape[0]
     L = cfg.n_layers
-    one = attn.init_cache(B, cfg.n_kv_heads, buf_len, cfg.head_dim, dtype)
-    self_cache = jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape), one)
+    one = attn.init_cache(batch_size, cfg.n_kv_heads, buf_len, cfg.head_dim,
+                          dtype)
+    self_cache = jax.tree.map(lambda a: jnp.broadcast_to(a, (L,) + a.shape),
+                              one)
     ck, cv = jax.vmap(lambda p: _cross_kv(p, enc_out, cfg))(params["dec"])
-    states = {"self": self_cache, "ck": ck, "cv": cv}
+    return {"self": self_cache, "ck": ck, "cv": cv}, 0
+
+
+def encdec_prefill_chunk(cfg, params, states, tokens, index, serve_window=0):
+    """One stream chunk of decoder prefill (see ``lm_prefill_chunk``)."""
     x = _embed(params, cfg, tokens)
-    x, states = decode_stack(cfg, params, x, states=states, index=0)
+    x, states = decode_stack(cfg, params, x, states=states, index=index,
+                             window=serve_window)
+    return _head(params, cfg, x[:, -1:])[:, 0], states
+
+
+def encdec_prefill(cfg, params, tokens, enc_in, buf_len, serve_window=0):
+    states, _ = encdec_make_state(cfg, params, tokens.shape[0], enc_in,
+                                  buf_len)
+    x = _embed(params, cfg, tokens)
+    x, states = decode_stack(cfg, params, x, states=states, index=0,
+                             window=serve_window)
     return _head(params, cfg, x[:, -1:])[:, 0], states
 
 
 def encdec_decode_step(cfg, params, states, token, index, serve_window=0):
-    del serve_window
     x = _embed(params, cfg, token)
-    x, states = decode_stack(cfg, params, x, states=states, index=index)
+    x, states = decode_stack(cfg, params, x, states=states, index=index,
+                             window=serve_window)
     return _head(params, cfg, x)[:, 0], states

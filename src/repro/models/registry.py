@@ -7,6 +7,16 @@ signature used by the trainer, the serving engine, and the dry-run:
     loss(params, batch)                         -> (loss, metrics)
     prefill(params, batch, buf_len, window=0)   -> (last_logits, states)
     decode_step(params, states, token, index, window=0) -> (logits, states)
+    make_state(params, batch, buf_len, window=0) -> (blank states, start)
+    prefill_chunk(params, states, tokens, index, window=0) -> (logits, states)
+
+``make_state``/``prefill_chunk`` are the streaming/serving lanes: blank
+per-request decode state (primed with any non-token context — encoder
+frames, vlm prefix — so ``start`` is the first TOKEN position) plus a
+multi-token chunk step, so prompts longer than ``buf_len`` stream through
+the ring buffer and the serving engine resets a slot by inserting a fresh
+``make_state`` pytree (chunk-by-chunk prefill reproduces the one-shot
+``prefill``).
 
 ``batch`` keys: tokens (B,S), labels (B,S) [loss only], and per family the
 stubbed modality inputs: prefix (B,P,D) for vlm/audio decoder-only,
@@ -31,6 +41,8 @@ class ModelAPI:
     loss: Callable[..., Any]
     prefill: Callable[..., Any]
     decode_step: Callable[..., Any]
+    make_state: Callable[..., Any]
+    prefill_chunk: Callable[..., Any]
 
 
 def build_model(cfg: ModelConfig) -> ModelAPI:
@@ -48,6 +60,15 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
         def decode_step(params, states, token, index, window=0):
             return encdec_lib.encdec_decode_step(cfg, params, states, token,
                                                  index, window)
+
+        def make_state(params, batch, buf_len, window=0):
+            return encdec_lib.encdec_make_state(
+                cfg, params, batch["tokens"].shape[0], batch["enc"], buf_len,
+                window)
+
+        def prefill_chunk(params, states, tokens, index, window=0):
+            return encdec_lib.encdec_prefill_chunk(cfg, params, states,
+                                                   tokens, index, window)
     else:
         def init(key):
             return lm.init_lm(cfg, key)
@@ -64,5 +85,15 @@ def build_model(cfg: ModelConfig) -> ModelAPI:
             return lm.lm_decode_step(cfg, params, states, token, index,
                                      serve_window=window)
 
+        def make_state(params, batch, buf_len, window=0):
+            return lm.lm_make_state(cfg, params, batch["tokens"].shape[0],
+                                    buf_len, prefix=batch.get("prefix"),
+                                    serve_window=window)
+
+        def prefill_chunk(params, states, tokens, index, window=0):
+            return lm.lm_prefill_chunk(cfg, params, states, tokens, index,
+                                       serve_window=window)
+
     return ModelAPI(cfg=cfg, init=init, loss=loss, prefill=prefill,
-                    decode_step=decode_step)
+                    decode_step=decode_step, make_state=make_state,
+                    prefill_chunk=prefill_chunk)

@@ -68,12 +68,14 @@ def _causal_conv(xBC, w, b, conv_state=None):
     return jax.nn.silu(out), new_state
 
 
-def _ssd_chunked(xh, B_, C_, a_log, chunk):
+def _ssd_chunked(xh, B_, C_, a_log, chunk, h0=None):
     """Chunked SSD scan.
 
     xh: (Bt, S, H, P) inputs already scaled by dt; B_, C_: (Bt, S, N);
-    a_log: (Bt, S, H) per-step log decay (<= 0). Returns y: (Bt, S, H, P)
-    and final state (Bt, H, P, N).
+    a_log: (Bt, S, H) per-step log decay (<= 0). ``h0`` (Bt, H, P, N) is
+    the carried-in state for streamed (chunked) prefill — the inter-chunk
+    recursion starts from it exactly as if the earlier tokens had been in
+    this call. Returns y: (Bt, S, H, P) and final state (Bt, H, P, N).
     """
     Bt, S, H, P = xh.shape
     N = B_.shape[-1]
@@ -113,7 +115,8 @@ def _ssd_chunked(xh, B_, C_, a_log, chunk):
         h_new = dc[:, :, None, None] * h_prev + st
         return h_new, y_int
 
-    h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bt, H, P, N), jnp.float32)
     xs = (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2),
           C_.transpose(1, 0, 2, 3), la.transpose(1, 0, 2, 3))
     h_final, y_inter = jax.lax.scan(body, h0, xs)
@@ -150,7 +153,9 @@ def mamba_forward(p, x, cfg, state=None):
         y = jnp.einsum("bhpn,bn->bhp", h_new, C_[:, 0])[:, None]
         ssm_state = h_new
     else:
-        y, ssm_state = _ssd_chunked(xh_dt, B_, C_, a_log, cfg.ssm_chunk)
+        h0 = None if state is None else state["ssm"]
+        y, ssm_state = _ssd_chunked(xh_dt, B_, C_, a_log, cfg.ssm_chunk,
+                                    h0=h0)
 
     y = y + p["D"][None, None, :, None] * xh
     y = y.reshape(Bt, S, d_in).astype(x.dtype)

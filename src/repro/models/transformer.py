@@ -395,6 +395,38 @@ def lm_prefill(cfg, params, tokens, buf_len, prefix=None, serve_window=0):
     return _head(params, cfg, x[:, -1:])[:, 0], states
 
 
+def lm_make_state(cfg, params, batch_size, buf_len, prefix=None,
+                  serve_window=0):
+    """Blank decode states for ``batch_size`` sequences plus the stream
+    start index (serving slot-reset / chunked-prefill entry point).
+
+    Without a prefix this is just ``init_states`` and start 0. With a
+    prefix (vlm/audio decoder-only) the prefix embeddings are run through
+    the stack first — they occupy absolute positions ``0..P-1`` — and the
+    returned start index is ``P``, so the caller streams raw TOKENS only
+    (chunked prefill never needs to re-split the modality stub)."""
+    dtype = jnp.dtype(cfg.dtype)
+    states = init_states(cfg, params["blocks"], batch_size, buf_len, dtype)
+    if prefix is None:
+        return states, 0
+    x = prefix.astype(dtype)
+    _, states, _ = run_blocks(params["blocks"], x, cfg, states=states,
+                              index=0, serve_window=serve_window)
+    return states, prefix.shape[1]
+
+
+def lm_prefill_chunk(cfg, params, states, tokens, index, serve_window=0):
+    """Run ``tokens`` (B, C) through the stack at absolute positions
+    ``index..index+C-1``, updating the (possibly ring) caches / recurrent
+    states in place. Returns (last-token logits (B, V), new states) —
+    exactly ``lm_prefill`` restricted to one stream chunk, so feeding a
+    prompt chunk-by-chunk reproduces the one-shot prefill."""
+    x = _embed(params, cfg, tokens)
+    x, states, _ = run_blocks(params["blocks"], x, cfg, states=states,
+                              index=index, serve_window=serve_window)
+    return _head(params, cfg, x[:, -1:])[:, 0], states
+
+
 def lm_decode_step(cfg, params, states, token, index, serve_window=0):
     """One decode step. token: (B, 1) int32; index: scalar int32 absolute
     position. Returns (logits (B, V), new states)."""

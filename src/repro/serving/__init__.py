@@ -1,3 +1,12 @@
-from repro.serving.engine import decode_key, generate, make_serve_step
+from repro.serving.engine import (
+    SlotEngine, decode_key, decode_loop_cache_size, default_chunk, generate,
+    make_serve_step,
+)
+from repro.serving.sampling import GREEDY, SamplingParams, sample_token
+from repro.serving.scheduler import Request, Scheduler, ServeReport, serve
 
-__all__ = ["decode_key", "generate", "make_serve_step"]
+__all__ = [
+    "GREEDY", "Request", "SamplingParams", "Scheduler", "ServeReport",
+    "SlotEngine", "decode_key", "decode_loop_cache_size", "default_chunk",
+    "generate", "make_serve_step", "sample_token", "serve",
+]

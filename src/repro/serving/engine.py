@@ -1,17 +1,47 @@
-"""Serving engine: batched prefill + greedy decode over the KV cache.
+"""Serving engine: continuous batching over the position-tagged KV/ring
+cache, plus the one-shot ``generate`` entry point.
+
+Two layers:
+
+* ``generate`` — prefill-then-decode for a fixed batch. The decode scan is
+  jitted with DONATED states (one compile per (model, max_new_tokens,
+  window, sampling) tuple; the prompt start index is a traced scalar so
+  prompt length does not retrace the loop). Prompts longer than
+  ``buf_len`` stream through the ring buffer in fixed-size chunks via
+  ``ModelAPI.make_state`` / ``prefill_chunk`` (window mode only — without
+  a sliding window a ring overwrite would silently truncate the prompt).
+
+* ``SlotEngine`` — the continuous-batching core. A fixed ``(max_slots,)``
+  decode batch where per-slot index / generated-token counter / PRNG key /
+  budget / active lanes ride IN the slot-state pytree, so a single
+  compiled decode step serves admissions and evictions mid-stream with no
+  recompiles: admission = (jitted blank request state) + (jitted chunked
+  prefill of all full chunks) + (jitted donated insert into the slot
+  axis); the prompt TAIL (1..chunk tokens) is fed through the decode step
+  itself so the first sampled token comes out of the same compiled step
+  (fused sampling, per-slot ``decode_key`` fold-in contract); eviction is
+  the in-compile budget check flipping the active lane. The host-side
+  ``Scheduler`` (repro.serving.scheduler) packs the request queue into
+  slots and mirrors the lane arithmetic.
 
 ``make_serve_step`` builds the single-token decode function that the
 decode-shape dry-runs lower (decode_32k / long_500k): ONE new token against
 a cache of seq_len. ``window`` activates the sliding-window serving variant
 (ring-buffer cache) that makes long_500k sub-quadratic for dense archs
-(DESIGN.md §Decode-shape applicability).
+(DESIGN.md §Decode-shape applicability and §Serving).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.registry import ModelAPI
+from repro.serving.sampling import (
+    GREEDY, SamplingParams, mask_logits, sample_token,
+)
 
 
 def make_serve_step(model: ModelAPI, window: int = 0):
@@ -32,38 +62,347 @@ def decode_key(key, i: int):
     return jax.random.fold_in(key, i)
 
 
+def default_chunk(buf_len: int) -> int:
+    """Streaming-prefill chunk size when the caller does not pick one."""
+    return min(buf_len, 128)
+
+
+def _resolve_sampling(greedy, sampling):
+    if sampling is not None:
+        return sampling
+    # greedy=False with no explicit params is the legacy pure-categorical
+    # sampler: temperature 1, no truncation
+    return GREEDY if greedy else SamplingParams()
+
+
+def _pick(lg, k, sp):
+    """Batched pick with ONE shared key per step (generate's legacy
+    contract); the slot engine uses per-slot keys via sample_token."""
+    if sp.greedy:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(k, mask_logits(lg, sp)).astype(jnp.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_jit(model: ModelAPI, buf_len: int, window: int):
+    return jax.jit(lambda params, batch: model.prefill(
+        params, batch, buf_len=buf_len, window=window))
+
+
+@functools.lru_cache(maxsize=None)
+def _chunk_jit(model: ModelAPI, window: int):
+    return jax.jit(
+        lambda params, states, toks, idx: model.prefill_chunk(
+            params, states, toks, idx, window=window),
+        donate_argnums=1)
+
+
+@functools.lru_cache(maxsize=None)
+def _decode_loop_jit(model: ModelAPI, max_new_tokens: int, window: int,
+                     sp: SamplingParams):
+    """Jitted decode scan with donated states. ``start`` is traced, so
+    calls of identical (batch, buf) shape NEVER retrace — pinned by the
+    compile-counter test. Exposed via generate(...) only."""
+    def loop(params, states, logits0, k0, start):
+        tok0 = _pick(logits0, decode_key(k0, 0), sp)
+
+        def body(carry, i):
+            tok, states = carry
+            # token i-1 sits at absolute position start + i - 1 (the first
+            # generated token IS position `start`; the historical start+i
+            # convention left a one-position gap after the prompt)
+            lg, states = model.decode_step(params, states, tok[:, None],
+                                           start + i - 1, window=window)
+            nxt = _pick(lg, jax.random.fold_in(k0, i), sp)  # decode_key, i >= 1
+            return (nxt, states), tok
+
+        (last, fin), toks = jax.lax.scan(body, (tok0, states),
+                                         jnp.arange(1, max_new_tokens,
+                                                    dtype=jnp.int32))
+        # returning the final states gives the donated input an output to
+        # alias into (and callers a resumable cache)
+        return jnp.concatenate([toks.T, last[:, None]], axis=1), fin
+
+    return jax.jit(loop, donate_argnums=1)
+
+
+def decode_loop_cache_size(model: ModelAPI, max_new_tokens: int, window: int,
+                           sp: SamplingParams = GREEDY) -> int:
+    """Compile count of generate's decode loop for this config. Backs the
+    no-retrace test: two generate calls of identical shape must leave
+    this at 1."""
+    return _decode_loop_jit(model, max_new_tokens, window, sp)._cache_size()
+
+
+def _ring_check_chunk(buf_len, window, chunk):
+    """Ring-streaming contract: a C-token chunk write overwrites C slots,
+    and the chunk's EARLIEST query still needs window-1 of history — so
+    exact chunked streaming needs buf_len >= window + chunk - 1 slack
+    (per-token decode is the chunk == 1 corner, where buf_len == window
+    suffices). Validated, not silently truncated."""
+    if not 1 <= chunk <= buf_len:
+        raise ValueError(
+            f"chunk must be in [1, buf_len={buf_len}], got {chunk}")
+    if window and chunk > buf_len - window + 1:
+        raise ValueError(
+            f"chunk {chunk} with window {window} needs buf_len >= "
+            f"{window + chunk - 1} (got {buf_len}): a chunk write would "
+            f"clobber ring slots its own queries still attend to")
+
+
+def _ring_default_chunk(buf_len, window):
+    if window:
+        return max(1, min(default_chunk(buf_len), buf_len - window + 1))
+    return default_chunk(buf_len)
+
+
+def _stream_prefill(model, params, batch, buf_len, window, chunk):
+    """Chunked prefill for prompts longer than buf_len: run every chunk
+    through the jitted prefill_chunk lane (ring writes wrap via
+    cache_update's mod-scatter). Returns (last logits, states)."""
+    tokens = batch["tokens"]
+    _ring_check_chunk(buf_len, window, chunk)
+    states, start = model.make_state(params, batch, buf_len, window=window)
+    S = tokens.shape[1]
+    cf = _chunk_jit(model, window)
+    idx, logits = start, None
+    n_full = S // chunk
+    for j in range(n_full):
+        logits, states = cf(params, states, tokens[:, j * chunk:(j + 1) * chunk],
+                            idx)
+        idx += chunk
+    if S - n_full * chunk:
+        logits, states = cf(params, states, tokens[:, n_full * chunk:], idx)
+    return logits, states
+
+
 def generate(model: ModelAPI, params, batch, *, max_new_tokens: int,
-             buf_len: int, window: int = 0, greedy: bool = True, key=None):
+             buf_len: int, window: int = 0, greedy: bool = True, key=None,
+             sampling: SamplingParams | None = None, chunk: int = 0):
     """Prefill the prompt then decode ``max_new_tokens`` greedily (or
     sampled). ``max_new_tokens == 1`` is a plain prefill-then-pick (the
-    decode scan runs zero times). Returns (tokens (B, max_new_tokens),
-    final logits)."""
+    decode scan runs zero times). ``sampling`` overrides ``greedy`` with
+    fused temperature/top-k/top-p. Prompts longer than ``buf_len`` stream
+    chunk-wise through the ring buffer (requires ``window > 0``). Returns
+    (tokens (B, max_new_tokens), final prefill logits)."""
+    if max_new_tokens < 1:
+        raise ValueError(f"max_new_tokens must be >= 1, got {max_new_tokens}")
+    if window > buf_len:
+        raise ValueError(
+            f"buf_len {buf_len} smaller than window {window}: the ring "
+            f"buffer must hold at least one full attention window")
+    sp = _resolve_sampling(greedy, sampling)
     prompt = batch["tokens"]
     B, S = prompt.shape
-    prefix = 0
-    if "prefix" in batch:
-        prefix = batch["prefix"].shape[1]
-    logits, states = model.prefill(params, batch, buf_len=buf_len,
-                                   window=window)
-    start = S + (prefix if not model.cfg.n_enc_layers else 0)
+    prefix = batch["prefix"].shape[1] if "prefix" in batch else 0
+    extra = prefix if not model.cfg.n_enc_layers else 0
 
-    def pick(lg, k):
-        if greedy:
-            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(k, lg).astype(jnp.int32)
+    if extra + S <= buf_len:
+        logits, states = _prefill_jit(model, buf_len, window)(params, batch)
+    else:
+        if window <= 0:
+            raise ValueError(
+                f"prompt of {S} tokens (+{extra} prefix) exceeds buf_len "
+                f"{buf_len} without a sliding window: ring overwrite would "
+                f"silently truncate the prompt — pass window > 0 or grow "
+                f"buf_len")
+        logits, states = _stream_prefill(
+            model, params, batch, buf_len, window,
+            chunk or _ring_default_chunk(buf_len, window))
+    start = S + extra
 
     k0 = key if key is not None else jax.random.PRNGKey(0)
-    tok0 = pick(logits, decode_key(k0, 0))
-
-    def body(carry, i):
-        tok, states = carry
-        lg, states = model.decode_step(params, states, tok[:, None],
-                                       start + i, window=window)
-        nxt = pick(lg, jax.random.fold_in(k0, i))   # decode_key, i >= 1
-        return (nxt, states), tok
-
-    (last, _), toks = jax.lax.scan(body, (tok0, states),
-                                   jnp.arange(1, max_new_tokens,
-                                              dtype=jnp.int32))
-    out = jnp.concatenate([toks.T, last[:, None]], axis=1)
+    out, _ = _decode_loop_jit(model, max_new_tokens, window, sp)(
+        params, states, logits, k0, start)
     return out, logits
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+class SlotEngine:
+    """Compiled lanes for slot-based continuous batching.
+
+    The slot-state pytree is ``{"model": <per-slot model states stacked on
+    axis 0>, "index", "gen", "budget", "key", "active"}``. One decode step
+    vmaps ``ModelAPI.decode_step`` over the slot axis with per-slot
+    index/key lanes, samples in-compile (``sample_token`` with the
+    ``decode_key`` fold-in contract on the per-slot generated-token
+    counter), freezes inactive slots' states, and flips ``active`` off the
+    moment a slot's budget is exhausted. All four lanes — decode, chunk
+    prefill, request state, slot insert — compile exactly once for a given
+    engine; admissions and evictions never retrace.
+
+    ``gen`` is the generated-token index of the NEXT sample; it starts at
+    ``-(tail_len - 1)`` so the step that consumes the last prompt-tail
+    token lands on ``gen == 0`` (first kept sample, keyed by the request
+    key itself). Samples drawn while ``gen < 0`` are prompt-feeding
+    by-products and are discarded by the host scheduler.
+    """
+
+    def __init__(self, model: ModelAPI, params, *, max_slots: int,
+                 buf_len: int, window: int = 0, chunk: int = 0,
+                 sampling: SamplingParams = GREEDY, example=None):
+        if max_slots < 1:
+            raise ValueError(f"max_slots must be >= 1, got {max_slots}")
+        if buf_len < 1:
+            raise ValueError(f"buf_len must be >= 1, got {buf_len}")
+        if window < 0:
+            raise ValueError(f"window must be >= 0, got {window}")
+        if window > buf_len:
+            raise ValueError(
+                f"buf_len {buf_len} smaller than window {window}: the ring "
+                f"buffer must hold at least one full attention window")
+        # default smaller than generate's streaming chunk: a request's
+        # prompt TAIL (up to `chunk` tokens) rides the per-token decode
+        # lane, so huge chunks trade prefill efficiency for tail latency
+        chunk = chunk or min(32, _ring_default_chunk(buf_len, window))
+        _ring_check_chunk(buf_len, window, chunk)
+        self.model = model
+        self.params = params
+        self.max_slots = max_slots
+        self.buf_len = buf_len
+        self.window = window
+        self.chunk = chunk
+        self.sampling = sampling
+        if example is None:
+            if model.cfg.n_enc_layers:
+                raise ValueError(
+                    "enc-dec serving needs an example batch carrying the "
+                    "encoder-frame shape (example={'tokens': ..., 'enc': ...})")
+            example = {"tokens": np.zeros((1, 1), np.int32)}
+        self.example = example
+
+        w = window
+
+        def fresh(params, batch):
+            return model.make_state(params, batch, buf_len, window=w)
+
+        def chunk_step(params, state, toks, idx):
+            return model.prefill_chunk(params, state, toks, idx, window=w)
+
+        sp = sampling
+
+        def step(params, slots, toks):
+            def one(mstate, tok, idx, gen, key, act):
+                lg, new = model.decode_step(params, mstate, tok[None, None],
+                                            idx, window=w)
+                i = jnp.maximum(gen, 0)
+                k = jnp.where(i == 0, key, jax.random.fold_in(key, i))
+                nxt = sample_token(lg[0].astype(jnp.float32), k, sp)
+                new = jax.tree.map(lambda n, o: jnp.where(act, n, o),
+                                   new, mstate)
+                return nxt, new
+
+            nxt, new_model = jax.vmap(one)(
+                slots["model"], toks, slots["index"], slots["gen"],
+                slots["key"], slots["active"])
+            act = slots["active"]
+            gen_after = slots["gen"] + 1
+            return nxt, {
+                "model": new_model,
+                "index": jnp.where(act, slots["index"] + 1, slots["index"]),
+                "gen": jnp.where(act, gen_after, slots["gen"]),
+                "budget": slots["budget"],
+                "key": slots["key"],
+                "active": act & (gen_after < slots["budget"]),
+            }
+
+        def insert(slots, mstate, slot, idx0, gen0, budget, key):
+            model_new = jax.tree.map(
+                lambda all_, one: jax.lax.dynamic_update_slice(
+                    all_, one[None].astype(all_.dtype),
+                    (slot,) + (0,) * one.ndim),
+                slots["model"], mstate)
+            return {
+                "model": model_new,
+                "index": slots["index"].at[slot].set(idx0),
+                "gen": slots["gen"].at[slot].set(gen0),
+                "budget": slots["budget"].at[slot].set(budget),
+                "key": slots["key"].at[slot].set(key),
+                "active": slots["active"].at[slot].set(True),
+            }
+
+        self._fresh = jax.jit(fresh)
+        self._chunk = jax.jit(chunk_step, donate_argnums=1)
+        self._decode = jax.jit(step, donate_argnums=1)
+        # donate only the slot table: the B=1 request state is a
+        # dynamic_update_slice operand, never aliasable into the output
+        self._insert = jax.jit(insert, donate_argnums=0)
+
+        blank, start0 = self._fresh(self.params, self.example)
+        self.start0 = int(start0)
+        self._blank = jax.tree.map(lambda a: np.asarray(a), blank)
+
+    # -- host API ----------------------------------------------------------
+
+    def blank_slots(self):
+        """Fresh all-inactive slot states (max_slots stacked blanks)."""
+        S = self.max_slots
+        return {
+            "model": jax.tree.map(
+                lambda a: jnp.asarray(np.repeat(a[None], S, axis=0)),
+                self._blank),
+            "index": jnp.zeros((S,), jnp.int32),
+            "gen": jnp.zeros((S,), jnp.int32),
+            "budget": jnp.ones((S,), jnp.int32),
+            "key": jnp.zeros((S, 2), jnp.uint32),
+            "active": jnp.zeros((S,), bool),
+        }
+
+    def request_state(self, batch):
+        """Blank per-request (B=1) state primed with modality context.
+        Returns (state, start index of the first prompt token)."""
+        state, start = self._fresh(self.params, batch)
+        return state, int(start)
+
+    def prefill_chunks(self, state, tokens, start):
+        """Stream all FULL chunks of a request's prompt through the jitted
+        chunk lane; the remaining 1..chunk tail tokens are returned for
+        the host to feed through the decode step (the step consuming the
+        last tail token yields generated token 0). Returns
+        (state, index of first tail token, tail list)."""
+        tokens = np.asarray(tokens).reshape(-1)
+        if tokens.size < 1:
+            raise ValueError("empty prompt")
+        n_full = (tokens.size - 1) // self.chunk
+        idx = start
+        for j in range(n_full):
+            _, state = self._chunk(
+                self.params, state,
+                tokens[None, j * self.chunk:(j + 1) * self.chunk].astype(np.int32),
+                np.int32(idx))
+            idx += self.chunk
+        return state, idx, [int(t) for t in tokens[n_full * self.chunk:]]
+
+    def insert(self, slots, state, slot, idx0, gen0, budget, key):
+        """Admit a prefilled request into a slot (donated write of the
+        model state + all lanes)."""
+        if not 0 <= slot < self.max_slots:
+            raise ValueError(
+                f"slot {slot} out of range for max_slots {self.max_slots}")
+        if budget < 1:
+            raise ValueError(f"max_new_tokens must be >= 1, got {budget}")
+        return self._insert(slots, state, np.int32(slot), np.int32(idx0),
+                            np.int32(gen0), np.int32(budget),
+                            np.asarray(key, np.uint32))
+
+    def decode(self, slots, toks):
+        """One continuous-batching decode step over all slots. ``toks``:
+        (max_slots,) int32 tokens being fed (prompt tail or previous
+        sample; junk for inactive slots). Returns (sampled (max_slots,)
+        np.int32, new slots)."""
+        nxt, slots = self._decode(self.params, slots,
+                                  np.asarray(toks, np.int32))
+        return np.asarray(nxt), slots
+
+    def compile_cache_sizes(self):
+        """Per-lane XLA compile counts — the no-recompile-after-warmup
+        test pins these to stay flat across admissions/evictions."""
+        return {
+            "fresh": self._fresh._cache_size(),
+            "chunk": self._chunk._cache_size(),
+            "decode": self._decode._cache_size(),
+            "insert": self._insert._cache_size(),
+        }

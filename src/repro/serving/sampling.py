@@ -1,0 +1,107 @@
+"""Fused batched sampling for the decode scan: temperature, top-k, and
+top-p (nucleus) filtering composed into one traced function over a
+``(V,)`` logit row, vmapped per slot by the serving engine.
+
+The filters compose in the standard order temperature -> top-k -> top-p
+(a token must survive BOTH truncations), all inside the compiled decode
+step — no host round-trip between logits and the sampled token. Greedy
+decoding is the ``temperature == 0`` corner and ignores the key.
+
+``SamplingParams`` is a frozen dataclass so an engine's sampling config
+is hashable and participates in jit-cache keys; validation raises
+``ValueError`` (not assert) so it survives ``python -O``
+(tests/optcheck.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """top_k == 0 and top_p == 1.0 disable the respective truncation;
+    temperature == 0.0 means greedy (argmax)."""
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingParams(temperature=0.0)
+
+
+def _top_k_mask(logits, k):
+    """Keep the k largest logits per row (ties at the threshold all
+    survive — strictly a superset of k, matching the usual impl)."""
+    kth = jax.lax.top_k(logits, k)[0][..., -1:]
+    return jnp.where(logits >= kth, logits, NEG_INF)
+
+
+def _top_p_mask(logits, p):
+    """Nucleus: keep the smallest prefix of the probability-sorted vocab
+    whose mass reaches p. The EXCLUSIVE cumulative sum keeps the first
+    token unconditionally, so the mask can never empty the vocab."""
+    sort = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
+    probs = jax.nn.softmax(sort, axis=-1)
+    mass_before = jnp.cumsum(probs, axis=-1) - probs
+    sorted_keep = mass_before < p
+    # threshold = smallest kept logit; everything >= it survives
+    thresh = jnp.min(jnp.where(sorted_keep, sort, jnp.inf), axis=-1,
+                     keepdims=True)
+    return jnp.where(logits >= thresh, logits, NEG_INF)
+
+
+def mask_logits(logits, sp: SamplingParams):
+    """Temperature + top-k + top-p over ``(..., V)`` logits. Greedy (and
+    the no-op params temperature=1/top_k=0/top_p=1) return the input
+    bit-identically, preserving the legacy ``categorical(key, logits)``
+    semantics pinned in tests/test_clock.py."""
+    if sp.greedy:
+        return logits
+    x = logits
+    if sp.temperature != 1.0:
+        x = x / jnp.float32(sp.temperature)
+    if sp.top_k:
+        x = _top_k_mask(x, min(sp.top_k, x.shape[-1]))
+    if sp.top_p < 1.0:
+        x = _top_p_mask(x, jnp.float32(sp.top_p))
+    return x
+
+
+def sample_token(logits, key, sp: SamplingParams):
+    """One token id (int32) from one ``(V,)`` float32 logit row."""
+    if sp.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, mask_logits(logits, sp)).astype(jnp.int32)
+
+
+def sample_batch(logits, keys, sp: SamplingParams):
+    """(B, V) logits + (B,) per-row keys -> (B,) tokens, one independent
+    draw per row (the serving engine's per-slot lanes)."""
+    if sp.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    x = mask_logits(logits, sp)
+    return jax.vmap(
+        lambda lg, k: jax.random.categorical(k, lg))(x, keys).astype(jnp.int32)
+
+
+__all__ = ["GREEDY", "SamplingParams", "mask_logits", "sample_batch",
+           "sample_token"]

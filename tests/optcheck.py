@@ -96,6 +96,70 @@ def main():
                   lambda: train_batch_specs(ARCHS["yi-6b"], shape, 4, 2),
                   "train batch not divisible by workers")
 
+    # serving surface: slot overflow, bad sampling params, ring-contract
+    # conflicts — all ValueError (never assert) so they survive -O
+    from repro.serving import Request, SamplingParams, Scheduler, SlotEngine
+    from repro.serving import generate
+    expect_raises(ValueError, lambda: SamplingParams(temperature=-1.0),
+                  "SamplingParams negative temperature")
+    expect_raises(ValueError, lambda: SamplingParams(top_k=-1),
+                  "SamplingParams negative top_k")
+    expect_raises(ValueError, lambda: SamplingParams(top_p=0.0),
+                  "SamplingParams top_p out of range")
+    expect_raises(ValueError, lambda: Scheduler(0),
+                  "Scheduler zero slots")
+    expect_raises(ValueError, lambda: Scheduler(1, mode="adaptive"),
+                  "Scheduler unknown mode")
+    expect_raises(ValueError,
+                  lambda: Request(rid=0, tokens=np.zeros((0,)),
+                                  max_new_tokens=1),
+                  "Request empty prompt")
+
+    from repro.configs import reduced
+    from repro.models import build_model
+    scfg = reduced(ARCHS["yi-6b"])
+    smodel = build_model(scfg)
+    sparams = smodel.init(jax.random.PRNGKey(0))
+    expect_raises(ValueError,
+                  lambda: SlotEngine(smodel, sparams, max_slots=0, buf_len=8),
+                  "SlotEngine zero slots")
+    expect_raises(ValueError,
+                  lambda: SlotEngine(smodel, sparams, max_slots=1, buf_len=8,
+                                     window=9),
+                  "SlotEngine window exceeds buf_len")
+    expect_raises(ValueError,
+                  lambda: SlotEngine(smodel, sparams, max_slots=1, buf_len=16,
+                                     window=16, chunk=8),
+                  "SlotEngine chunk clobbers live ring slots")
+    seng = SlotEngine(smodel, sparams, max_slots=1, buf_len=16)
+    expect_raises(ValueError,
+                  lambda: seng.insert(seng.blank_slots(), None, 1, 0, 0, 4,
+                                      np.zeros(2, np.uint32)),
+                  "SlotEngine slot overflow")
+    expect_raises(ValueError,
+                  lambda: Scheduler(1).submit(
+                      Request(rid=0, tokens=np.ones((10,), np.int64),
+                              max_new_tokens=10), seng),
+                  "Scheduler submit beyond windowless buf_len")
+    expect_raises(ValueError,
+                  lambda: generate(smodel, sparams,
+                                   {"tokens": np.zeros((1, 20), np.int32)},
+                                   max_new_tokens=2, buf_len=16),
+                  "generate windowless prompt overflow")
+
+    from repro.models.attention import cache_update, init_cache
+    import jax.numpy as jnp2
+    cache = init_cache(1, 1, 4, 2, jnp2.float32)
+    big = jnp2.zeros((1, 5, 1, 2))
+    expect_raises(ValueError, lambda: cache_update(cache, big, big, 0),
+                  "cache_update write exceeds buf_len")
+
+    from repro.launch.roofline import serving_model
+    expect_raises(ValueError,
+                  lambda: serving_model(ARCHS["gemma2-2b"], max_slots=0,
+                                        chunk=1, state_bytes_per_slot=1),
+                  "serving_model zero slots")
+
     import tempfile, os
     from repro.checkpoint import load_pytree, save_pytree
     with tempfile.TemporaryDirectory() as d:

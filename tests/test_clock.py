@@ -565,8 +565,10 @@ def test_generate_sample_keys_first_vs_fold_in_chain():
     tok = jax.random.categorical(decode_key(key, 0), logits).astype(jnp.int32)
     ref = [tok]
     for i in range(1, N):
+        # token i-1 occupies position prompt_len + i - 1 (the first
+        # generated token extends the prompt with no position gap)
         lg, states = model.decode_step(params, states, tok[:, None],
-                                       prompt.shape[1] + i)
+                                       prompt.shape[1] + i - 1)
         tok = jax.random.categorical(decode_key(key, i), lg).astype(jnp.int32)
         ref.append(tok)
     np.testing.assert_array_equal(np.asarray(toks),
