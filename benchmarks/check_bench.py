@@ -12,6 +12,14 @@ Two classes of fields:
   they are REPORTED as deltas (and surfaced in the CI job summary via
   ``$GITHUB_STEP_SUMMARY``) but never fail the check.
 
+The overlap baseline's ring fields (``ring_bytes_per_hop``,
+``gather_bytes``, ``ring_hops``, ``ring_ok``, ``ring_matches_gather``,
+``modeled_order_ok``) are structural — deterministic arithmetic and
+bit-parity booleans pinning ``ring_bytes_per_hop <= gather_bytes`` and the
+``staleness_k >= doublebuf >= staleness1 >= exact`` modeled-throughput
+ordering; ``us_ring``/``us_gather``/``speedup_staleness_k`` ride the
+timing prefixes.
+
 CI usage (the microbench smoke step overwrites the repo-root files, so the
 baselines are stashed first). ``--baseline``/``--fresh`` repeat and are
 zipped into pairs:

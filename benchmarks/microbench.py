@@ -299,24 +299,31 @@ def bench_overlap_round(*, smoke=False):
     out = {"mesh": "x".join(str(s) for s in mesh.devices.shape),
            "workers": M, "tau": tau, "modes": {}}
 
-    def modeled_us(mode, R, n):
+    def modeled_us(mode, R, n, k=2):
         # per-device round: compute window = tau local steps of the MLP
         # (fwd+bwd ~ 3x fwd flops) on m_loc workers; consensus bytes =
         # worker-row all-gather + (R, R) partial-Gram psum. The per-mode
         # formulas live in launch.roofline.overlap_model (the ONE copy —
-        # also behind the dry-run §Overlap-roofline table).
+        # also behind the dry-run §Overlap-roofline table). staleness_k
+        # reads the k-deep ring entry (ppermute ring wire + k compute
+        # windows to hide it behind).
         dims = [data["dim"], width, width, data["n_classes"]]
         fwd = 2 * bs * sum(a * b for a, b in zip(dims, dims[1:]))
         work_s = 3 * fwd * tau * (M // rows_sz) / rf.PEAK_FLOPS
         data_bytes = R * (n // cols_sz) * 4 + R * R * 4
         rows = rf.overlap_model({"compute_s": work_s, "memory_s": 0.0},
                                 {"data": data_bytes}, R=R)
+        if mode == "staleness_k":
+            return rows["staleness_k_s"][str(k)] * 1e6
         return rows[{"none": "exact_s", "staleness1": "staleness1_s",
                      "doublebuf": "doublebuf_s"}[mode]] * 1e6
 
-    for mode, chunks in (("none", 1), ("staleness1", 1), ("doublebuf", 4)):
+    K_DEPTH = 2
+    for mode, chunks in (("none", 1), ("staleness1", 1), ("doublebuf", 4),
+                         ("staleness_k", 4)):
         dcfg = DPPFConfig(alpha=0.1, lam=0.5, tau=tau, engine="flat",
-                          overlap=mode, overlap_chunks=chunks)
+                          overlap=mode, overlap_chunks=chunks,
+                          staleness=K_DEPTH if mode == "staleness_k" else 1)
         st = init_train_state(init, opt, dcfg, M, jax.random.PRNGKey(0))
         L = st.engine.layout
         st = shard_train_state(st, mesh, plan, dcfg=dcfg)
@@ -324,10 +331,12 @@ def bench_overlap_round(*, smoke=False):
             mlp_loss, opt, dcfg, mesh=mesh, plan=plan, base_lr=0.05,
             total_steps=100), donate_argnums=0)
         us = _time_donated(lambda s: fn(s, batch)[0], st, n=n_it)
-        mus = modeled_us(mode, L.R, L.n)
-        out["modes"][mode] = {"overlap_chunks": chunks,
-                              "us_per_round": round(us, 1),
-                              "modeled_round_us": round(mus, 3)}
+        mus = modeled_us(mode, L.R, L.n, k=K_DEPTH)
+        row = {"overlap_chunks": chunks, "us_per_round": round(us, 1),
+               "modeled_round_us": round(mus, 3)}
+        if mode == "staleness_k":
+            row["staleness"] = K_DEPTH
+        out["modes"][mode] = row
         csv("microbench", op=f"overlap_round_{mode}",
             us_per_round=round(us, 1), modeled_round_us=round(mus, 3),
             overlap_chunks=chunks, mesh=out["mesh"])
@@ -335,16 +344,86 @@ def bench_overlap_round(*, smoke=False):
     mus = {m: out["modes"][m]["modeled_round_us"] for m in out["modes"]}
     out["speedup_staleness1"] = round(us["none"] / us["staleness1"], 2)
     out["speedup_doublebuf"] = round(us["none"] / us["doublebuf"], 2)
+    out["speedup_staleness_k"] = round(us["none"] / us["staleness_k"], 2)
     out["modeled_order_ok"] = bool(
-        mus["doublebuf"] <= mus["staleness1"] <= mus["none"])
+        mus["staleness_k"] <= mus["doublebuf"]
+        <= mus["staleness1"] <= mus["none"])
     csv("microbench", op="overlap_round",
         speedup_staleness1=out["speedup_staleness1"],
         speedup_doublebuf=out["speedup_doublebuf"],
+        speedup_staleness_k=out["speedup_staleness_k"],
         modeled_order_ok=out["modeled_order_ok"],
         note="round throughput vs exact on the hier 2x2x2 mesh; doublebuf "
              "chunks the snapshot gather+Gram mid-scan (boundary = mix "
-             "GEMM only); modeled_* pins doublebuf >= staleness1 >= exact "
-             "on the roofline hardware model")
+             "GEMM only); modeled_* pins staleness_k >= doublebuf >= "
+             "staleness1 >= exact on the roofline hardware model")
+    return out
+
+
+def bench_ring_round(*, smoke=False):
+    """Ring-vs-gather acceptance rows: the staleness-k mid-scan gather as
+    a ``ppermute`` ring (R-1 hops of one worker row each,
+    launch.mesh.ring_gather) against one ``all_gather`` of the same
+    payload, on the flat 8x1 mesh.
+
+    * ``us_ring`` / ``us_gather`` — measured host wall time (timing
+      fields; forced host devices make collectives memcpys, so the ring's
+      latency-hiding advantage does not show on CPU).
+    * ``ring_bytes_per_hop`` / ``gather_bytes`` / ``ring_hops`` — the
+      modeled wire schedule (deterministic arithmetic). STRUCTURAL:
+      the committed baseline pins ``ring_ok`` =
+      ``ring_bytes_per_hop <= gather_bytes`` and the hop count R-1.
+    * ``ring_matches_gather`` — bit-for-bit parity of the two assembled
+      (R, n) views (the concatenation-order contract precise mode
+      depends on). STRUCTURAL.
+    """
+    if len(jax.devices()) < 8:
+        csv("microbench", op="ring_round", skipped=1,
+            note="needs 8 devices; set "
+                 "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return None
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_flat_engine_mesh, ring_gather
+    R = 8
+    n = 4096 if smoke else 65536
+    n_it = 10 if smoke else 20
+    mesh, plan = make_flat_engine_mesh(R)
+    x = jax.device_put(
+        jnp.arange(R * n, dtype=jnp.float32).reshape(R, n),
+        jax.sharding.NamedSharding(mesh, P("data", None)))
+
+    def _ring(v):
+        return ring_gather(v, ("data",), world=R, axis=0)
+
+    def _gather(v):
+        return jax.lax.all_gather(v, ("data",), axis=0, tiled=True)
+
+    f_ring = jax.jit(shard_map(_ring, mesh=mesh, in_specs=P("data", None),
+                               out_specs=P(None, None), check_rep=False))
+    f_gather = jax.jit(shard_map(_gather, mesh=mesh,
+                                 in_specs=P("data", None),
+                                 out_specs=P(None, None),
+                                 check_rep=False))
+    same = bool(jnp.array_equal(f_ring(x), f_gather(x)))
+    us_ring = _time(f_ring, x, n=n_it)
+    us_gather = _time(f_gather, x, n=n_it)
+    gather_bytes = R * n * 4
+    out = {"workers": R, "cols": n,
+           "us_ring": round(us_ring, 1), "us_gather": round(us_gather, 1),
+           "gather_bytes": gather_bytes,
+           "ring_bytes_per_hop": gather_bytes // R,
+           "ring_hops": R - 1,
+           "ring_ok": gather_bytes // R <= gather_bytes,
+           "ring_matches_gather": same}
+    csv("microbench", op="ring_round", us_ring=round(us_ring, 1),
+        us_gather=round(us_gather, 1), gather_bytes=gather_bytes,
+        ring_bytes_per_hop=out["ring_bytes_per_hop"],
+        ring_hops=out["ring_hops"], ring_ok=out["ring_ok"],
+        ring_matches_gather=same,
+        note="ppermute ring (R-1 one-row hops) vs one tiled all_gather of "
+             "the full (R, n) view; parity is the staleness-k "
+             "concatenation-order contract")
     return out
 
 
@@ -397,6 +476,7 @@ def run(*, smoke=False):
     bench_sharded_round(smoke=smoke)
     hier_row = bench_hierarchical_round(smoke=smoke)
     overlap_row = bench_overlap_round(smoke=smoke)
+    ring_row = bench_ring_round(smoke=smoke)
     roundclock = bench_roundclock(smoke=smoke)
     # machine-readable perf trajectory across PRs (repo root)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -415,7 +495,8 @@ def run(*, smoke=False):
     opath = os.path.join(root, "BENCH_overlap.json")
     with open(opath, "w") as f:
         json.dump({"smoke": smoke, "backend": jax.default_backend(),
-                   "overlap_round": overlap_row}, f, indent=2,
+                   "overlap_round": overlap_row,
+                   "ring_gather": ring_row}, f, indent=2,
                   sort_keys=True)
         f.write("\n")
     print(f"wrote {opath}")

@@ -93,20 +93,25 @@ def roofline_table(recs, mesh="single"):
 
 def overlap_table(recs, mesh="single"):
     """§Overlap-roofline: modeled round time exact vs staleness1 vs
-    doublebuf (launch.roofline.overlap_model) against the comm/compute
-    crossover, from the baseline train records."""
+    doublebuf vs the staleness-k ring (launch.roofline.overlap_model)
+    against the comm/compute crossover, from the baseline train records."""
     rows = [
-        "| arch | shape | exact s | staleness1 s | doublebuf s | "
-        "crossover (comm/compute) | overlap gain |",
-        "|---|---|---|---|---|---|---|",
+        "| arch | shape | exact s | staleness1 s | doublebuf s | k=2 ring s "
+        "| ring B/hop | crossover (comm/compute) | overlap gain |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
     for (a, s, m, mode, plan), r in sorted(recs.items()):
         om = r.get("overlap_model")
         if m != mesh or plan != "baseline" or mode != "train" or not om:
             continue
+        ks = om.get("staleness_k_s", {})
+        k2 = fmt_s(ks["2"]) if "2" in ks else "—"
+        hop = (f"{om['ring_bytes_per_hop']/1e9:.2f} GB"
+               if "ring_bytes_per_hop" in om else "—")
         rows.append(
             f"| {a} | {s} | {fmt_s(om['exact_s'])} | "
             f"{fmt_s(om['staleness1_s'])} | {fmt_s(om['doublebuf_s'])} | "
+            f"{k2} | {hop} | "
             f"{om['crossover']:.2e} | {om['overlap_gain']:.4f} |")
     return "\n".join(rows)
 
@@ -162,27 +167,45 @@ def artifact_table():
 
 
 def _overlap_bench_line():
-    """The committed BENCH_overlap.json acceptance row (overlap_round:
-    exact vs staleness1 vs doublebuf on the 2x2x2 mesh)."""
+    """The committed BENCH_overlap.json acceptance rows (overlap_round:
+    exact vs staleness1 vs doublebuf vs staleness-k on the 2x2x2 mesh,
+    plus the ring_gather ring-vs-gather unit)."""
     path = os.path.join(ROOT, "BENCH_overlap.json")
     if not os.path.exists(path):
         return ("* `overlap_round` (`BENCH_overlap.json`): not committed "
                 "yet — run the microbench on 8 forced host devices.")
     with open(path) as f:
-        row = json.load(f)["overlap_round"]
+        bench = json.load(f)
+    row = bench["overlap_round"]
     if not row:
         return ("* `overlap_round` (`BENCH_overlap.json`): skipped "
                 "(needs 8 forced host devices).")
     chunks = row["modes"]["doublebuf"]["overlap_chunks"]
-    return (f"* `overlap_round` (`BENCH_overlap.json`): exact vs "
-            f"staleness1 vs doublebuf round throughput on the "
-            f"{row['mesh']} mesh ({row['workers']} workers, tau "
-            f"{row['tau']}) — doublebuf dispatches the snapshot gather + "
-            f"partial-Gram psum in {chunks} chunks mid-scan; the modeled "
-            f"ordering doublebuf >= staleness1 >= exact is a structural "
-            f"field (`modeled_order_ok`), measured speedups are "
-            f"host-relative timing fields (`check_bench.py` gates the "
-            f"structure).")
+    k = row["modes"].get("staleness_k", {}).get("staleness", 2)
+    lines = [
+        f"* `overlap_round` (`BENCH_overlap.json`): exact vs "
+        f"staleness1 vs doublebuf vs staleness-k (k={k}) round "
+        f"throughput on the {row['mesh']} mesh ({row['workers']} workers, "
+        f"tau {row['tau']}) — doublebuf dispatches the snapshot gather + "
+        f"partial-Gram psum in {chunks} chunks mid-scan, staleness-k "
+        f"spreads it over k rounds on a ppermute ring; the modeled "
+        f"ordering staleness_k >= doublebuf >= staleness1 >= exact is a "
+        f"structural field (`modeled_order_ok`), measured speedups are "
+        f"host-relative timing fields (`check_bench.py` gates the "
+        f"structure)."]
+    ring = bench.get("ring_gather")
+    if ring:
+        lines.append(
+            f"* `ring_round` (`BENCH_overlap.json`): the staleness-k "
+            f"`ppermute` ring vs one tiled `all_gather` of the same "
+            f"({ring['workers']}, {ring['cols']}) view — "
+            f"{ring['ring_hops']} hops of "
+            f"{ring['ring_bytes_per_hop']} B against a "
+            f"{ring['gather_bytes']} B gather; `ring_ok` "
+            f"(per-hop bytes <= gather bytes) and `ring_matches_gather` "
+            f"(bit-for-bit assembled-view parity, the concatenation-order "
+            f"contract precise mode rests on) are structural fields.")
+    return "\n".join(lines)
 
 
 def bench_section():
@@ -351,19 +374,24 @@ def render() -> str:
         roofline_table(recs) if any(
             k[2] == "single" for k in recs) else MISSING_DRYRUN,
         "",
-        "## Overlap roofline — exact vs staleness1 vs doublebuf "
-        "(modeled round time)",
+        "## Overlap roofline — exact vs staleness1 vs doublebuf vs "
+        "staleness-k ring (modeled round time)",
         "",
         "`DPPFConfig.overlap` moves the round's consensus collectives off "
         "the boundary critical path: staleness-1 hides the (R, R) "
         "partial-Gram psum behind the tau local steps; double-buffered "
         "consensus additionally chunk-dispatches the snapshot's "
         "worker-row all-gather mid-scan, leaving only the mix GEMM at "
-        "the boundary (DESIGN.md §Overlap). Modeled per-round seconds "
-        "from the dry-run collective split (`launch/roofline.py::"
-        "overlap_model`); crossover < 1 means doublebuf hides ALL "
-        "consensus traffic. Measured host rows: `benchmarks/microbench."
-        "py` `overlap_round` (committed `BENCH_overlap.json`).",
+        "the boundary; staleness-k generalizes the carry to a k-deep "
+        "snapshot ring whose gather runs as a `ppermute` ring of R-1 "
+        "one-row hops, giving each consensus k rounds of compute to hide "
+        "behind (DESIGN.md §Overlap). Modeled per-round seconds from the "
+        "dry-run collective split (`launch/roofline.py::overlap_model`); "
+        "crossover < 1 means doublebuf hides ALL consensus traffic, and "
+        "the k=2 ring column caps the residual at "
+        "`max(ring_s - k*work, 0)`. Measured host rows: `benchmarks/"
+        "microbench.py` `overlap_round` + `ring_round` (committed "
+        "`BENCH_overlap.json`).",
         "",
         overlap_table(recs) if any(
             k[2] == "single" and k[3] == "train" and

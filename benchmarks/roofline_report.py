@@ -39,21 +39,41 @@ def run(out_dir="results/dryrun"):
             useful_flop_ratio=round(r.get("useful_flop_ratio", 0.0), 3),
             compile_s=r["compile_s"])
     # the overlap-model comparison (launch.roofline.overlap_model): modeled
-    # round time exact vs staleness1 vs doublebuf against the comm/compute
-    # crossover, one row per train-mode record
+    # round time exact vs staleness1 vs doublebuf vs the staleness-k ring
+    # (k in {1, 2, 4}) against the comm/compute crossover, one row per
+    # train-mode record
     for r in recs:
         om = r.get("overlap_model")
         if not om or r.get("overlap", "none") != "none":
             continue
+        ks = om.get("staleness_k_s", {})
         csv("roofline_overlap",
             arch=r["arch"], shape=r["shape"], mesh=r["mesh"], plan=r["plan"],
             exact_s=f"{om['exact_s']:.3e}",
             staleness1_s=f"{om['staleness1_s']:.3e}",
             doublebuf_s=f"{om['doublebuf_s']:.3e}",
+            stalek1_s=f"{ks['1']:.3e}" if "1" in ks else "-",
+            stalek2_s=f"{ks['2']:.3e}" if "2" in ks else "-",
+            stalek4_s=f"{ks['4']:.3e}" if "4" in ks else "-",
             crossover=round(om["crossover"], 3),
             overlap_gain=round(om["overlap_gain"], 3),
             note="crossover<1: doublebuf hides ALL consensus comm behind "
-                 "the tau local steps")
+                 "the tau local steps; staleness-k widens the window "
+                 "k-fold")
+    # ring-vs-gather wire comparison: the staleness-k gather runs as a
+    # ppermute ring of R-1 single-row hops — per-hop bytes are 1/R of the
+    # all-gather payload (the elastic rejoin rides the same hops)
+    for r in recs:
+        om = r.get("overlap_model")
+        if not om or "ring_bytes_per_hop" not in om \
+                or r.get("overlap", "none") != "none":
+            continue
+        csv("roofline_ring",
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"], plan=r["plan"],
+            gather_bytes=f"{om['gather_bytes']:.3e}",
+            ring_bytes_per_hop=f"{om['ring_bytes_per_hop']:.3e}",
+            ring_hops=om["ring_hops"],
+            ring_s=f"{om['ring_s']:.3e}")
     return recs
 
 

@@ -7,8 +7,9 @@ written on the 16x16 mesh restores onto the 2x16x16 multi-pod mesh.
 
 ``save_train_state``/``load_train_state`` round-trip a full flat-engine
 ``TrainState`` — the (R, n) view, optimizer state, consensus state, the
-staleness-1 snapshot, and the step counter — for mid-run resume
-(``launch/train.py --ckpt``).
+overlap snapshot (the staleness-1 buffer or the staleness-k ring, whose
+nested dict keys path-flatten the same way), and the step counter — for
+mid-run resume (``launch/train.py --ckpt``).
 """
 from __future__ import annotations
 
@@ -117,7 +118,12 @@ def load_train_state(path, like, *, shardings=None, clock=None):
         del template["snap"]
     tree, extra = load_pytree(path, template)
     if missing_snap:
-        tree["snap"] = dict(like.snap, x=tree["params"] + 0.0)
+        sx = tree["params"] + 0.0
+        if like.snap["x"].ndim == sx.ndim + 1:
+            # staleness-k ring template: warm-start every slot of the
+            # (k, R, n) ring with the restored params
+            sx = np.broadcast_to(sx[None], like.snap["x"].shape) + 0.0
+        tree["snap"] = dict(like.snap, x=sx)
     if shardings is not None:
         for k, sh in shardings.items():
             if k in tree:

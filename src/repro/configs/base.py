@@ -272,14 +272,32 @@ class DPPFConfig:
     # dispatches its worker-row gather + partial-Gram psum in
     # ``overlap_chunks`` column chunks interleaved with the scan's local
     # steps, leaving only the coefficient math and the mix GEMM at the
-    # round boundary (DESIGN.md §Overlap). Flat engine only.
+    # round boundary; "staleness_k" generalizes doublebuf to a k-deep ring
+    # of snapshots — round r applies the consensus of the round-(r-k)
+    # snapshot, rounds 0..k-1 are exact-consensus pipeline fill, and the
+    # sharded worker-row gather runs as a ppermute ring of R-1 single-row
+    # hops (DESIGN.md §Overlap). Flat engine only.
     overlap: str = "none"
-    # doublebuf: number of column chunks the mid-scan snapshot gather +
-    # partial-Gram psum are split into (1 = one un-chunked dispatch,
-    # bit-for-bit the staleness1 consensus; more chunks interleave finer
-    # with the tau local steps — effective count is capped by tau and by
-    # the local column count)
+    # doublebuf/staleness_k: number of column chunks the mid-scan snapshot
+    # gather + partial-Gram psum are split into (1 = one un-chunked
+    # dispatch, bit-for-bit the staleness1 consensus; more chunks
+    # interleave finer with the tau local steps — effective count is
+    # capped by tau and by the local column count)
     overlap_chunks: int = 4
+    # staleness_k: pipeline depth k — the snapshot ring holds k buffers and
+    # the consensus applied after round r was computed from round r-k.
+    # k=1 is the doublebuf recursion (and bit-for-bit staleness1 when
+    # overlap_chunks=1). Ignored by the other overlap modes.
+    staleness: int = 1
+    # bounded-async elastic membership (staleness_k only): a per-row
+    # participation mask rides the snapshot carry; an inactive worker row
+    # keeps its params frozen and drops out of the consensus target
+    # weights (the row-stochastic lowering renormalizes over active rows).
+    # A row is forced back in after ``staleness`` consecutive misses
+    # (bounded staleness) and rejoins with an EASGD-style catch-up pull of
+    # strength ``elastic_catchup`` toward the active-fleet mean.
+    elastic: bool = False
+    elastic_catchup: float = 0.5
 
     def __post_init__(self):
         # ValueError, not assert: every check here guards a user-facing
@@ -291,7 +309,8 @@ class DPPFConfig:
             raise ValueError(f"unknown tau schedule {self.tau_schedule!r}")
         if self.tau_schedule == "qsr" and self.qsr_beta <= 0:
             raise ValueError("tau_schedule='qsr' needs qsr_beta > 0")
-        if self.overlap not in ("none", "staleness1", "doublebuf"):
+        if self.overlap not in ("none", "staleness1", "doublebuf",
+                                "staleness_k"):
             raise ValueError(f"unknown overlap mode {self.overlap!r}")
         if self.overlap != "none" and self.engine != "flat":
             raise ValueError(
@@ -300,6 +319,21 @@ class DPPFConfig:
         if self.overlap_chunks < 1:
             raise ValueError(
                 f"overlap_chunks must be >= 1, got {self.overlap_chunks}")
+        if self.staleness < 1:
+            raise ValueError(
+                f"staleness must be >= 1, got {self.staleness}")
+        if self.elastic and self.overlap != "staleness_k":
+            raise ValueError(
+                "elastic=True requires overlap='staleness_k' (the "
+                "participation mask rides the snapshot ring carry)")
+        if self.elastic and self.exact_second_term:
+            raise ValueError(
+                "elastic=True does not support exact_second_term (the "
+                "masked lowering only covers coefficient stages)")
+        if not 0.0 <= self.elastic_catchup <= 1.0:
+            raise ValueError(
+                f"elastic_catchup must be in [0, 1], got "
+                f"{self.elastic_catchup}")
 
     @property
     def valley_width(self) -> float:

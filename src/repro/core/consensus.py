@@ -100,7 +100,7 @@ def _metrics(consensus_dist, pre_dist, pull_force, push_force):
 
 
 def apply_round(params, dcfg, lam_t, state, *, losses=None, grad_norms=None,
-                push_from="average", engine=None, first_gram=None):
+                push_from="average", engine=None, first_gram=None, mask=None):
     """One communication round. Returns (params, state, metrics).
 
     ``params`` is a worker-stacked pytree (tree path) or the engine's flat
@@ -108,14 +108,21 @@ def apply_round(params, dcfg, lam_t, state, *, losses=None, grad_norms=None,
     ``first_gram`` (flat path only) is a precomputed column contraction
     for the FIRST stage — the summed ``engine.stage_comm`` chunks the
     double-buffered overlap dispatches mid-scan; the stage then runs its
-    coefficient math + mixing only (DESIGN.md §Overlap).
+    coefficient math + mixing only (DESIGN.md §Overlap). ``mask`` (flat
+    path only) is the elastic participation vector ``(M,)`` — inactive
+    worker rows drop out of every target-weight combination AND have their
+    pull/push coefficients zeroed, so their rows pass through the mixing
+    bit-exactly unchanged (DESIGN.md §Overlap, elastic membership).
     """
     if engine is not None:
         return _apply_round_flat(engine, params, dcfg, lam_t, state,
                                  losses=losses, grad_norms=grad_norms,
-                                 push_from=push_from, first_gram=first_gram)
+                                 push_from=push_from, first_gram=first_gram,
+                                 mask=mask)
     if first_gram is not None:
         raise ValueError("first_gram requires the flat engine")
+    if mask is not None:
+        raise ValueError("elastic mask requires the flat engine")
     return _apply_round_tree(params, dcfg, lam_t, state, losses=losses,
                              grad_norms=grad_norms, push_from=push_from)
 
@@ -164,7 +171,7 @@ def _apply_round_tree(stacked, dcfg, lam_t, state, *, losses, grad_norms,
 # ---------------------------------------------------------------------------
 
 def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
-                 push_from="average"):
+                 push_from="average", mask=None):
     """Lower a consensus method to its flat-engine stage list.
 
     Returns ``(stages, alpha)`` with each stage ``("coef", T, c0, c1)`` (a
@@ -175,6 +182,14 @@ def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
     and then execute the identical list via ``apply_round(...,
     first_gram=...)`` (the lowering is a pure function of its inputs, so
     lowering twice is free trace-time work).
+
+    ``mask`` is the elastic participation vector ``(M,)`` (1 = active):
+    the row-stochastic target weights renormalize over ACTIVE rows only
+    (uniform and mgrawa weights re-sum to one, lsgd's argmin skips
+    inactive losses, easgd's center pulls toward the active mean) and
+    every coefficient vector's inactive worker entries are zeroed, so an
+    inactive row neither contributes to nor receives the consensus — its
+    flat-view row passes through each mixing stage bit-exactly.
     """
     method = dcfg.consensus
     alpha = 1.0 if method == "hard" else dcfg.alpha
@@ -183,6 +198,15 @@ def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
     eye = jnp.eye(R, dtype=jnp.float32)
     u = engine.uniform                       # (R,) worker mean weights
     zeros = jnp.zeros((R,), jnp.float32)
+    act = gate = None
+    if mask is not None:
+        act = jnp.asarray(mask, jnp.float32)             # (M,) 1 = active
+        mfull = zeros.at[:M].set(act)
+        # masked uniform: the worker mean over active rows only
+        u = mfull / jnp.maximum(jnp.sum(mfull), 1.0)
+        # coefficient gate: inactive worker rows get zero pull/push; aux
+        # rows always participate (easgd's center keeps tracking)
+        gate = jnp.ones((R,), jnp.float32).at[:M].set(act)
 
     def worker_T(w):
         """All worker rows target the combination w; aux rows stay put."""
@@ -214,14 +238,21 @@ def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
             elif method == "lsgd":
                 if losses is None:
                     raise ValueError("lsgd needs per-worker losses")
-                leader_w = jax.nn.one_hot(jnp.argmin(losses), R,
+                lsgd_losses = losses
+                if act is not None:
+                    # inactive rows can't lead: their (frozen-iterate)
+                    # losses are masked out of the argmin
+                    lsgd_losses = jnp.where(act > 0, losses, jnp.inf)
+                leader_w = jax.nn.one_hot(jnp.argmin(lsgd_losses), R,
                                           dtype=jnp.float32)
                 T1 = worker_T(leader_w)
             elif method == "mgrawa":
                 if grad_norms is None:
                     raise ValueError("mgrawa needs grad norms")
                 w = 1.0 / jnp.maximum(grad_norms, 1e-12)
-                w = w / jnp.sum(w)
+                if act is not None:
+                    w = w * act
+                w = w / jnp.maximum(jnp.sum(w), 1e-12)
                 T1 = worker_T(zeros.at[:M].set(w))
             else:
                 raise ValueError(method)
@@ -235,16 +266,23 @@ def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
                 else:
                     stages.append(("coef", worker_T(u), zeros,
                                    zeros.at[:M].set(-lam_t)))
+    if gate is not None:
+        if any(s[0] == "exact" for s in stages):
+            raise ValueError("elastic mask does not support "
+                             "exact_second_term stages")
+        stages = [("coef", T, c0 * gate, c1 * gate)
+                  for (_, T, c0, c1) in stages]
     return stages, alpha
 
 
 def _apply_round_flat(engine, flat, dcfg, lam_t, state, *, losses, grad_norms,
-                      push_from, first_gram=None):
+                      push_from, first_gram=None, mask=None):
     if engine.eps != dcfg.eps:
         # the engine's norm guard must match the config's (tree-path parity)
         engine = dataclasses.replace(engine, eps=dcfg.eps)
     stages, alpha = lower_stages(engine, dcfg, lam_t, losses=losses,
-                                 grad_norms=grad_norms, push_from=push_from)
+                                 grad_norms=grad_norms, push_from=push_from,
+                                 mask=mask)
     if first_gram is not None and (not stages or stages[0][0] != "coef"):
         raise ValueError("first_gram requires a leading coefficient stage "
                          "(every non-ddp lowering has one)")

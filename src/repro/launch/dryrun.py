@@ -93,15 +93,15 @@ def _n_workers(mesh, plan):
 # ---------------------------------------------------------------------------
 
 def build_train(arch, shape, mesh, plan, *, ddp=False, tau=4,
-                plan_name="baseline", overlap="none"):
+                plan_name="baseline", overlap="none", staleness=1):
     cfg = _cfg_for(arch, plan_name, train=True)
     model = build_model(cfg)
     # the overlapped round needs the flat engine (the stale snapshot is a
-    # flat (R, n) buffer); exact rounds keep the tree engine the committed
-    # records were built with
+    # flat (R, n) buffer — or a (k, R, n) ring under staleness_k); exact
+    # rounds keep the tree engine the committed records were built with
     dcfg = DPPFConfig(tau=tau, consensus="ddp" if ddp else "simple_avg",
                       engine="flat" if overlap != "none" else "tree",
-                      overlap=overlap)
+                      overlap=overlap, staleness=staleness)
     opt = make_optimizer(
         "sgd", momentum=0.9, weight_decay=1e-3,
         state_dtype="bfloat16" if plan_name in ("opt", "hier_opt")
@@ -143,10 +143,14 @@ def build_train(arch, shape, mesh, plan, *, ddp=False, tau=4,
                                             stacked=True)
         snap_sh = None
         if state_specs.snap is not None:
-            # overlap snapshot: a second (R, n) flat buffer, placed like
-            # the view; scalars replicated
-            snap_sh = {"x": p_sh, "losses": NamedSharding(mesh, P()),
-                       "gns": NamedSharding(mesh, P())}
+            # overlap snapshot: a second (R, n) flat buffer — or the
+            # (k, R, n) staleness ring — placed under the flat-view
+            # storage rule (flat_view_sharding is ring-aware); the
+            # per-round scalars replicated
+            snap_sh = {k: NamedSharding(mesh, P())
+                       for k in state_specs.snap if k != "x"}
+            snap_sh["x"] = mesh_lib.flat_view_sharding(
+                mesh, state_specs.snap["x"].shape, plan)
         st_sh = dataclasses.replace(
             state_specs,
             params=p_sh, opt={"mu": p_sh},
@@ -204,7 +208,7 @@ def build_decode(arch, shape, mesh, plan, plan_name="baseline"):
 # ---------------------------------------------------------------------------
 
 def run_one(arch, shape_name, mesh_kind, *, mode=None, plan_name="baseline",
-            tau=4, out_dir="results/dryrun", overlap="none"):
+            tau=4, out_dir="results/dryrun", overlap="none", staleness=1):
     shape = INPUT_SHAPES[shape_name]
     multi_pod = mesh_kind == "multi"
     mesh = _mesh_for(plan_name, multi_pod)
@@ -217,7 +221,8 @@ def run_one(arch, shape_name, mesh_kind, *, mode=None, plan_name="baseline",
     if mode in ("train", "ddp"):
         fn, args, cfg = build_train(arch, shape, mesh, plan,
                                     ddp=(mode == "ddp"), tau=tau,
-                                    plan_name=plan_name, overlap=overlap)
+                                    plan_name=plan_name, overlap=overlap,
+                                    staleness=staleness)
     elif mode == "prefill":
         fn, args, cfg = build_prefill(arch, shape, mesh, plan, plan_name)
     else:
@@ -279,15 +284,19 @@ def run_one(arch, shape_name, mesh_kind, *, mode=None, plan_name="baseline",
         "active_param_count": cfg.active_param_count(),
     }
     if mode == "train":
-        # modeled exact/staleness1/doublebuf round time vs the comm/compute
-        # crossover (launch.roofline.overlap_model) — rendered by
-        # roofline_report.py and the EXPERIMENTS.md §Overlap-roofline table
+        # modeled exact/staleness1/doublebuf/staleness-k round time (incl.
+        # the ppermute-ring term) vs the comm/compute crossover
+        # (launch.roofline.overlap_model) — rendered by roofline_report.py
+        # and the EXPERIMENTS.md §Overlap-roofline table
         rec["overlap_model"] = rf.overlap_model(
             terms, ana["collective_axis_bytes"],
             R=_n_workers(mesh, plan), seconds_scale=scale)
+        rec["staleness"] = staleness if overlap == "staleness_k" else None
     os.makedirs(out_dir, exist_ok=True)
     tag = f"{arch}_{shape_name}_{mesh_kind}_{mode}_{plan_name}"
-    if overlap != "none":
+    if overlap == "staleness_k":
+        tag += f"_{overlap}{staleness}"
+    elif overlap != "none":
         tag += f"_{overlap}"
     with open(os.path.join(out_dir, tag + ".json"), "w") as f:
         json.dump(rec, f, indent=1)
@@ -310,12 +319,15 @@ def main():
                     choices=["baseline", "hier", "seqshard", "opt", "hier_opt"])
     ap.add_argument("--tau", type=int, default=4)
     ap.add_argument("--overlap", default="none",
-                    choices=["none", "staleness1", "doublebuf"],
+                    choices=["none", "staleness1", "doublebuf",
+                             "staleness_k"],
                     help="compile the overlapped round (flat engine) "
                          "instead of the exact tree round — train-mode "
                          "combos only; every train record additionally "
-                         "carries the modeled exact/staleness1/doublebuf "
-                         "comparison (overlap_model)")
+                         "carries the modeled exact/staleness1/doublebuf/"
+                         "staleness-k + ring comparison (overlap_model)")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="staleness_k: snapshot-ring depth k")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun")
     args = ap.parse_args()
@@ -323,14 +335,20 @@ def main():
     # round-plan report: the clock every train-mode combo compiles against
     # (DESIGN.md §Round-clock) — tau from the CLI, the dry-run LR budget
     print(RoundClock(total_steps=TRAIN_STEPS, tau=args.tau,
-                     base_lr=TRAIN_LR, overlap=args.overlap).plan_table())
+                     base_lr=TRAIN_LR, overlap=args.overlap,
+                     staleness=args.staleness).plan_table())
     print()
 
     meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
     archs = sorted(ARCHS) if args.all or not args.arch else [args.arch]
     shapes = (list(INPUT_SHAPES) if args.all or not args.shape
               else [args.shape])
-    suffix = f"_{args.overlap}" if args.overlap != "none" else ""
+    if args.overlap == "staleness_k":
+        suffix = f"_{args.overlap}{args.staleness}"
+    elif args.overlap != "none":
+        suffix = f"_{args.overlap}"
+    else:
+        suffix = ""
 
     failures = []
     for mk in meshes:
@@ -352,7 +370,7 @@ def main():
                 try:
                     run_one(a, s, mk, mode=args.mode, plan_name=args.plan,
                             tau=args.tau, out_dir=args.out,
-                            overlap=args.overlap)
+                            overlap=args.overlap, staleness=args.staleness)
                 except Exception as e:
                     failures.append((tag, repr(e)))
                     print(f"[FAIL] {tag}: {e}")

@@ -13,6 +13,7 @@ from __future__ import annotations
 import math
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -213,12 +214,57 @@ def flat_view_sharding(mesh: Mesh, shape, plan: MeshPlan):
     over the worker axes, columns over fsdp+model axes — each only when
     divisible. Aux rows (easgd center) usually break row divisibility, in
     which case rows replicate here and `make_sharded_round_step` still
-    row-shards the worker block via its shard_map in_specs."""
-    R, n = shape
-    spec = [None, flat_col_entry(mesh, n, plan)]
+    row-shards the worker block via its shard_map in_specs.
+
+    A 3-D ``(k, R, n)`` shape is the staleness-k snapshot ring (leading
+    ring dim replicated, same row/column rule per slot)."""
+    *ring, R, n = shape
+    spec = [None] * len(ring) + [None, flat_col_entry(mesh, n, plan)]
     if plan.worker_axes and R % _axes_size(mesh, plan.worker_axes) == 0:
-        spec[0] = _axes_entry(plan.worker_axes)
+        spec[-2] = _axes_entry(plan.worker_axes)
     return NamedSharding(mesh, P(*spec))
+
+
+def ring_gather(x_loc, axes, *, world: int, axis=0):
+    """Worker-row gather as a ``ppermute`` ring — ``world - 1``
+    neighbor-to-neighbor hops of ONE local row block each, in place of one
+    monolithic ``lax.all_gather``.
+
+    Contract: the result is bit-for-bit ``jax.lax.all_gather(x_loc, axes,
+    axis=axis, tiled=True)`` — shard i's block lands at offset
+    ``i * x_loc.shape[axis]`` (the same row-major concatenation order, see
+    ``train.trainer._lin_index``) and blocks are moved verbatim, so
+    precise-mode parity is automatic. What changes is the transport: the
+    peak per-hop collective payload is one block (``1/world`` of the
+    all_gather payload) and each hop only talks to the two ring neighbors,
+    which lets the staleness-k scan interleave hops with its compute
+    segments (DESIGN.md §Overlap).
+
+    Multi-axis worker groups fall back to ``all_gather`` (a ring needs a
+    single linear axis order); ``world == 1`` is the identity. Call only
+    inside ``shard_map`` over ``axes``; ``world`` is the static product of
+    the mapped axis sizes.
+    """
+    if world == 1:
+        return x_loc
+    if len(axes) != 1:
+        return jax.lax.all_gather(x_loc, axes, axis=axis, tiled=True)
+    ax = axes[0]
+    idx = jax.lax.axis_index(ax)
+    m_loc = x_loc.shape[axis]
+    # rotate "forward": shard i hands its buffer to shard (i+1) % world, so
+    # after hop h the buffer holds the block of shard (idx - h - 1) % world
+    perm = [(i, (i + 1) % world) for i in range(world)]
+    out_shape = list(x_loc.shape)
+    out_shape[axis] = world * m_loc
+    out = jnp.zeros(tuple(out_shape), x_loc.dtype)
+    out = jax.lax.dynamic_update_slice_in_dim(out, x_loc, idx * m_loc, axis)
+    buf = x_loc
+    for hop in range(world - 1):
+        buf = jax.lax.ppermute(buf, ax, perm)
+        src = jnp.mod(idx - hop - 1, world)
+        out = jax.lax.dynamic_update_slice_in_dim(out, buf, src * m_loc, axis)
+    return out
 
 
 def batch_shardings(mesh: Mesh, batch, plan: MeshPlan, *, round_dims=True):

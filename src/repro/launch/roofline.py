@@ -310,23 +310,46 @@ def overlap_model(terms, axis_bytes, *, R=8, seconds_scale=1.0):
     * ``doublebuf``  — gather AND psum belong to the round-(k-1) snapshot
       and dispatch chunk-by-chunk under the scan; the boundary is local:
                          ``work + model_s + max(data_s - work, 0)``
+    * ``staleness_k`` — the doublebuf recursion generalized to a k-deep
+      snapshot ring whose worker-row gather runs as a ppermute ring
+      (R-1 hops of one row each instead of one bisection-limited
+      all-gather). Each hop moves ``gather_bytes / R`` and the ring's
+      wire time is ``ring_s = data_s * (R-1)/R``; with k rounds of
+      compute to hide it behind:
+                         ``work + model_s + max(ring_s - k*work, 0)``
 
     ``crossover = data_s / work``: below 1 the double-buffered round hides
     its entire consensus cost; above 1 the round is communication-bound
-    and hiding saturates at the compute window. ``psum_s`` uses the
-    engine's (R, R) fp32 payload.
+    and hiding saturates at the compute window — which staleness-k widens
+    k-fold. ``psum_s`` uses the engine's (R, R) fp32 payload.
+
+    Returned ring fields: ``gather_bytes`` (the worker-axis consensus
+    payload), ``ring_bytes_per_hop = gather_bytes / R`` (structurally
+    <= gather_bytes), ``ring_hops = R - 1``, ``ring_s``, and
+    ``staleness_k_s`` — a ``{str(k): seconds}`` dict for k in {1, 2, 4}.
+    By construction ``staleness_k_s[k] <= doublebuf_s <= staleness1_s <=
+    exact_s`` (check_bench pins the ordering on the committed records).
     """
     work = terms["compute_s"] + terms["memory_s"]
     model_s = axis_bytes.get("model", 0.0) / ICI_BW * seconds_scale
-    data_s = (axis_bytes.get("data", 0.0)
-              + axis_bytes.get("mixed", 0.0)
-              + axis_bytes.get("unknown", 0.0)) / ICI_BW * seconds_scale
+    gather_bytes = (axis_bytes.get("data", 0.0)
+                    + axis_bytes.get("mixed", 0.0)
+                    + axis_bytes.get("unknown", 0.0))
+    data_s = gather_bytes / ICI_BW * seconds_scale
     psum_s = min(R * R * 4 / ICI_BW * seconds_scale, data_s)
+    ring_s = data_s * (R - 1) / max(R, 1)
     rows = {
         "exact_s": work + model_s + data_s,
         "staleness1_s": (work + model_s + max(data_s - psum_s, 0.0)
                          + max(psum_s - work, 0.0)),
         "doublebuf_s": work + model_s + max(data_s - work, 0.0),
+        "gather_bytes": gather_bytes,
+        "ring_bytes_per_hop": gather_bytes / max(R, 1),
+        "ring_hops": R - 1,
+        "ring_s": ring_s,
+        "staleness_k_s": {str(k): work + model_s + max(ring_s - k * work,
+                                                       0.0)
+                          for k in (1, 2, 4)},
     }
     rows["crossover"] = data_s / work if work > 0 else float("inf")
     rows["overlap_gain"] = (rows["exact_s"] / rows["doublebuf_s"]

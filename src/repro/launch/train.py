@@ -22,7 +22,7 @@ from repro.models import build_model
 from repro.optim import make_optimizer
 from repro.train import (
     RoundClock, init_train_state, make_ddp_step, make_round_step,
-    make_sharded_round_step, shard_train_state,
+    make_sharded_round_step, set_participation, shard_train_state,
 )
 from repro.train.clock import RoundMetricsLogger
 from repro.train.trainer import TrainState, average_params
@@ -47,18 +47,41 @@ def main(argv=None):
                          "(R, n) view — worker rows plus aux consensus-"
                          "state rows — with fused Gram/mixing round update)")
     ap.add_argument("--overlap", default="none",
-                    choices=["none", "staleness1", "doublebuf"],
+                    choices=["none", "staleness1", "doublebuf",
+                             "staleness_k"],
                     help="staleness1 = apply the consensus computed from "
                          "the previous round's snapshot, hiding the "
                          "all-reduce behind the tau local steps; doublebuf "
                          "= additionally dispatch the snapshot's worker-"
                          "row gather + partial-Gram psum in chunks "
                          "interleaved with the scan, leaving only the mix "
-                         "GEMM at the boundary (flat engine only)")
+                         "GEMM at the boundary (flat engine only); "
+                         "staleness_k = generalize the carry to a k-deep "
+                         "snapshot ring (--staleness) whose mid-scan "
+                         "gather runs as a ppermute ring, spreading one "
+                         "consensus over k rounds of compute")
     ap.add_argument("--overlap-chunks", type=int, default=4,
-                    help="doublebuf: column chunks the mid-scan snapshot "
-                         "comm splits into (1 = bit-for-bit staleness1 "
-                         "consensus numerics)")
+                    help="doublebuf/staleness_k: column chunks the "
+                         "mid-scan snapshot comm splits into (1 = "
+                         "bit-for-bit staleness1 consensus numerics)")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="staleness_k: ring depth k — round r applies the "
+                         "consensus of the round-(r-k) snapshot; rounds "
+                         "0..k-1 are exact-consensus pipeline fill (k=1 "
+                         "is bit-for-bit doublebuf at --overlap-chunks 1)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="staleness_k: bounded-async elastic rounds — a "
+                         "worker row may sit out up to k rounds (frozen "
+                         "params, dropped from the Gram target weights) "
+                         "and rejoins with an EASGD-style catch-up pull")
+    ap.add_argument("--elastic-catchup", type=float, default=0.5,
+                    help="elastic: fraction of the gap to the active-row "
+                         "mean a rejoining row closes on re-entry")
+    ap.add_argument("--elastic-drop", default="", metavar="W,A,B",
+                    help="elastic demo: mark worker row W inactive for "
+                         "rounds [A, B) via train.set_participation (the "
+                         "bounded-staleness clamp still forces a rejoin "
+                         "after k missed rounds)")
     ap.add_argument("--sharded", action="store_true",
                     help="run the round under shard_map on all local "
                          "devices (launch.mesh.make_flat_engine_mesh; "
@@ -94,7 +117,7 @@ def main(argv=None):
     ap.add_argument("--log-every-round", default="", metavar="PATH",
                     help="write one JSON line of the unified round-metrics "
                          "dict (consensus_dist/pull_force/push_force/"
-                         "stale, plus the clock position) per round to "
+                         "staleness, plus the clock position) per round to "
                          "PATH (train.clock.RoundMetricsLogger; the ddp "
                          "branch logs per step on its tau=1 clock)")
     ap.add_argument("--seed", type=int, default=0)
@@ -145,8 +168,20 @@ def main(argv=None):
                       consensus=args.consensus, engine=args.engine,
                       overlap=args.overlap,
                       overlap_chunks=args.overlap_chunks,
+                      staleness=args.staleness,
+                      elastic=args.elastic or bool(args.elastic_drop),
+                      elastic_catchup=args.elastic_catchup,
                       lam_schedule=args.lam_schedule,
                       tau_schedule=args.tau_schedule, qsr_beta=args.qsr_beta)
+    drop_spec = ()
+    if args.elastic_drop:
+        try:
+            drop_spec = tuple(int(x) for x in args.elastic_drop.split(","))
+            if len(drop_spec) != 3 or not 0 <= drop_spec[0] < args.workers:
+                raise ValueError
+        except ValueError:
+            ap.error("--elastic-drop expects W,A,B with worker row "
+                     "0 <= W < --workers (e.g. --elastic-drop 2,3,5)")
     opt = make_optimizer(args.optimizer, momentum=0.9, weight_decay=1e-3)
     key = jax.random.PRNGKey(args.seed)
 
@@ -237,6 +272,12 @@ def main(argv=None):
         for spec in clock.rounds[int(state.round):]:
             batch = make_round_batch(task, args.seed, args.workers, spec.tau,
                                      spec.start, args.batch, cfg)
+            if drop_spec:
+                w_drop, r_a, r_b = drop_spec
+                mask = jnp.ones((args.workers,), jnp.float32)
+                if r_a <= spec.index < r_b:
+                    mask = mask.at[w_drop].set(0.0)
+                state = set_participation(state, mask)
             state, m = step(state, batch)
             if logger is not None:
                 logger(spec, m)

@@ -3,12 +3,12 @@ from repro.train.clock import (
 )
 from repro.train.trainer import (
     TrainState, average_params, init_train_state, make_ddp_step,
-    make_round_step, make_sharded_round_step, shard_train_state,
-    stacked_params,
+    make_round_step, make_sharded_round_step, set_participation,
+    shard_train_state, stacked_params,
 )
 
 __all__ = ["OVERLAP_MODES", "TAU_SCHEDULES", "RoundClock",
            "RoundMetricsLogger", "RoundSpec", "TrainState",
            "average_params", "init_train_state", "make_ddp_step",
-           "make_round_step", "make_sharded_round_step", "shard_train_state",
-           "stacked_params"]
+           "make_round_step", "make_sharded_round_step",
+           "set_participation", "shard_train_state", "stacked_params"]

@@ -46,7 +46,7 @@ from typing import Tuple
 from repro.core.schedules import cosine_lr, lam_schedule, qsr_tau
 
 TAU_SCHEDULES = ("fixed", "qsr")
-OVERLAP_MODES = ("none", "staleness1", "doublebuf")
+OVERLAP_MODES = ("none", "staleness1", "doublebuf", "staleness_k")
 
 
 @dataclass(frozen=True)
@@ -90,13 +90,17 @@ class RoundClock:
     lam_kind: str = "increasing"     # fixed | increasing | decreasing (§C.2)
     tau_schedule: str = "fixed"      # fixed | qsr (§7.2)
     qsr_beta: float = 0.0            # QSR: tau_t = max(tau, floor((beta/eta)^2))
-    # overlap-aware QSR: with a stale consensus ("staleness1"/"doublebuf",
-    # DESIGN.md §Overlap) round k applies the consensus of round k-1's
-    # iterate, so the QSR period of round k is sized from the LR of the
-    # PREVIOUS round's start — the stale LR — keeping sync frequency
-    # matched to the iterate actually being synchronized. The plan stays a
-    # host-side pure function of the config (static-shaped rounds).
+    # overlap-aware QSR: with a stale consensus ("staleness1"/"doublebuf"/
+    # "staleness_k", DESIGN.md §Overlap) round r applies the consensus of
+    # round r-k's iterate (k = ``staleness_depth``), so the QSR period of
+    # round r is sized from the LR of the round-(r-k) start — the stale LR
+    # — keeping sync frequency matched to the iterate actually being
+    # synchronized. The plan stays a host-side pure function of the config
+    # (static-shaped rounds).
     overlap: str = "none"
+    # pipeline depth k of overlap="staleness_k" (ignored by the other
+    # modes, whose depth is fixed at 1)
+    staleness: int = 1
 
     def __post_init__(self):
         # ValueError, not assert: these guard user-facing config plumbing
@@ -119,6 +123,20 @@ class RoundClock:
                              f"(expected one of {OVERLAP_MODES})")
         if self.warmup < 0:
             raise ValueError(f"warmup must be >= 0, got {self.warmup}")
+        if self.staleness < 1:
+            raise ValueError(f"staleness must be >= 1, got {self.staleness}")
+        if self.overlap == "staleness_k" and self.warmup > 0 and \
+                math.ceil(self.warmup / self.tau) < self.staleness:
+            # the first k rounds are exact-consensus pipeline fill; a
+            # warmup shorter than k rounds would end mid-fill, so the
+            # stale-LR QSR reads would straddle the warmup boundary
+            raise ValueError(
+                f"overlap='staleness_k' needs warmup >= k rounds so the "
+                f"pipeline fill never straddles the warmup boundary: "
+                f"warmup={self.warmup} steps covers "
+                f"{math.ceil(self.warmup / self.tau)} rounds at tau="
+                f"{self.tau} but staleness k={self.staleness} (use "
+                f"warmup=0 or warmup >= {self.staleness * self.tau})")
 
     @classmethod
     def from_config(cls, dcfg, *, base_lr: float, total_steps: int,
@@ -132,7 +150,19 @@ class RoundClock:
         return cls(total_steps=total_steps, tau=dcfg.tau, base_lr=base_lr,
                    warmup=warmup, lam=dcfg.lam, lam_kind=dcfg.lam_schedule,
                    tau_schedule=tau_schedule, qsr_beta=dcfg.qsr_beta,
-                   overlap=getattr(dcfg, "overlap", "none"))
+                   overlap=getattr(dcfg, "overlap", "none"),
+                   staleness=getattr(dcfg, "staleness", 1))
+
+    @property
+    def staleness_depth(self) -> int:
+        """Pipeline depth of the overlap mode: 0 (no overlap), 1
+        (staleness1/doublebuf) or k (staleness_k). Round r >= depth applies
+        the consensus of round r - depth; rounds 0..depth-1 are fill."""
+        if self.overlap == "none":
+            return 0
+        if self.overlap == "staleness_k":
+            return self.staleness
+        return 1
 
     # -- round plan ---------------------------------------------------------
 
@@ -153,15 +183,17 @@ class RoundClock:
                     # cosine-ruled round starts AT ``warmup``
                     tau_t = min(self.tau, self.warmup - t)
                 else:
-                    # overlap-aware QSR: under a stale consensus the round
-                    # applies the previous round's iterate, so its period
-                    # is ruled by the STALE LR — the previous round's
-                    # start (round 0 / the first post-warmup round have no
-                    # stale predecessor and use their own LR)
+                    # overlap-aware QSR: under a stale consensus round r
+                    # applies the round-(r-k) iterate (k = staleness
+                    # depth), so its period is ruled by the STALE LR — the
+                    # start of the round k back (fill rounds / the first
+                    # post-warmup rounds have no stale predecessor and use
+                    # their own LR)
                     t_lr = t
-                    if self.overlap != "none" and rounds and \
-                            rounds[-1].start >= self.warmup:
-                        t_lr = rounds[-1].start
+                    d = self.staleness_depth
+                    if d >= 1 and len(rounds) >= d and \
+                            rounds[-d].start >= self.warmup:
+                        t_lr = rounds[-d].start
                     eta = _host_cosine_lr(self.base_lr, t_lr,
                                           self.total_steps, self.warmup)
                     tau_t = qsr_tau(eta, self.tau, self.qsr_beta)
@@ -249,6 +281,7 @@ class RoundClock:
         all-reduces saved (``tests/test_clock.py`` pins exactly this
         plan)."""
         taus = self.taus()
+        depth = self.staleness_depth
         plan = []
         for spec in self.rounds:
             plan.append({
@@ -263,6 +296,10 @@ class RoundClock:
                     self.base_lr, spec.stop - 1, self.total_steps,
                     self.warmup), 6),
                 "warmup": spec.start < self.warmup,
+                # staleness depth of the consensus this round applies:
+                # rounds 0..depth-1 are exact fill (0), later rounds apply
+                # the round-(r-depth) snapshot (depth)
+                "staleness": depth if spec.index >= depth else 0,
             })
         return {
             "total_steps": self.total_steps,
@@ -272,6 +309,7 @@ class RoundClock:
             "warmup": self.warmup,
             "warmup_rounds": sum(1 for r in plan if r["warmup"]),
             "overlap": self.overlap,
+            "staleness": depth,
             "rounds": self.total_rounds,
             "fixed_rounds": self.fixed_rounds,
             "allreduces_saved": self.fixed_rounds - self.total_rounds,
@@ -291,7 +329,7 @@ class RoundClock:
             extra += (f", warmup {d['warmup']} steps = "
                       f"{d['warmup_rounds']} rounds")
         if d["overlap"] != "none":
-            extra += f", overlap {d['overlap']}"
+            extra += f", overlap {d['overlap']} (k={d['staleness']})"
             if d["tau_schedule"] == "qsr":
                 extra += " (stale-LR QSR)"
         head = [f"round plan: {d['rounds']} rounds over "
@@ -299,8 +337,8 @@ class RoundClock:
                 f"{d['tau_schedule']}, tau {d['tau_min']}..{d['tau_max']}, "
                 f"all-reduces saved vs fixed: {d['allreduces_saved']}"
                 f"{extra})",
-                "| round | start | tau | lam | lr window |",
-                "|---|---|---|---|---|"]
+                "| round | start | tau | lam | lr window | staleness |",
+                "|---|---|---|---|---|---|"]
         if len(rows) > max_rows:
             half = max(max_rows // 2, 1)
             shown = list(rows[:half]) + [None] + list(rows[-half:])
@@ -308,12 +346,12 @@ class RoundClock:
             shown = rows
         for r in shown:
             if r is None:
-                head.append("| ... | | | | |")
+                head.append("| ... | | | | | |")
                 continue
             tau_cell = f"{r['tau']} (warm)" if r["warmup"] else f"{r['tau']}"
             head.append(f"| {r['round']} | {r['start']} | {tau_cell} | "
                         f"{r['lam']:.4f} | {r['lr_start']:.4f} -> "
-                        f"{r['lr_end']:.4f} |")
+                        f"{r['lr_end']:.4f} | {r['staleness']} |")
         return "\n".join(head)
 
 
@@ -323,13 +361,18 @@ class RoundMetricsLogger:
     Drivers that iterate ``clock.rounds`` call the logger with the round's
     ``RoundSpec`` and the unified round-metrics dict every round builder
     emits (``consensus_dist``/``pre_dist``/``pull_force``/``push_force``/
-    ``train_loss``/``lam_t``/``stale`` — the ddp branch included, where the
-    consensus fields are zeros and the clock is the tau=1 per-step clock;
-    pass a plain step index instead of a spec there). Each line carries the
-    clock position (round, global start step, tau) plus the metrics, so a
-    QSR-adaptive run's log is self-describing. Values are converted via
-    ``float`` — call it OUTSIDE jit (on the returned metrics), never inside
-    a traced function. ``launch/train.py --log-every-round PATH`` wires it.
+    ``train_loss``/``lam_t``/``staleness`` — the ddp branch included, where
+    the consensus fields are zeros and the clock is the tau=1 per-step
+    clock; pass a plain step index instead of a spec there). ``staleness``
+    is the integer depth of the consensus the round applied (0 = exact,
+    k = the round-(r-k) snapshot); a legacy boolean ``stale`` key (the
+    pre-staleness_k schema, where 0/1 IS the depth) is normalized to
+    ``staleness`` so old emitters and old JSONL stay readable. Each line
+    carries the clock position (round, global start step, tau) plus the
+    metrics, so a QSR-adaptive run's log is self-describing. Values are
+    converted via ``float`` — call it OUTSIDE jit (on the returned
+    metrics), never inside a traced function.
+    ``launch/train.py --log-every-round PATH`` wires it.
     """
 
     def __init__(self, path: str):
@@ -344,6 +387,10 @@ class RoundMetricsLogger:
         else:   # ddp / per-step drivers: a bare global step index
             row = {"round": int(spec), "start": int(spec), "tau": 1}
         for k, v in metrics.items():
+            # legacy schema: the boolean ``stale`` flag's 0/1 parses
+            # directly as the integer staleness depth
+            if k == "stale" and "staleness" not in metrics:
+                k = "staleness"
             try:
                 row[k] = float(v)
             except (TypeError, ValueError):

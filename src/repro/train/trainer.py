@@ -23,7 +23,7 @@ Two round-level extensions on top of the flat engine:
   worker axes, columns over its fsdp/model axes; the round's collectives
   are one worker-row all-gather at the round boundary plus the engine's
   (R, R) partial-Gram psum (DESIGN.md §Sharded-execution).
-* ``DPPFConfig.overlap`` runs the two-buffer stale-consensus recursion
+* ``DPPFConfig.overlap`` runs the stale-consensus recursion
   (DESIGN.md §Overlap): ``"staleness1"`` applies the consensus computed
   from the PREVIOUS round's snapshot (carried in ``TrainState.snap``), so
   the consensus collectives have no data dependence on the current round's
@@ -32,7 +32,16 @@ Two round-level extensions on top of the flat engine:
   dispatches its worker-row gather + stage-1 Gram psum in
   ``overlap_chunks`` column chunks interleaved with the scan's segments,
   leaving only coefficient math + the mix GEMM at the round boundary
-  (round 0 fills the pipeline with an EXACT consensus of the fresh view).
+  (round 0 fills the pipeline with an EXACT consensus of the fresh view);
+  ``"staleness_k"`` generalizes doublebuf to a k-deep snapshot RING —
+  round r applies the consensus of the round-(r-k) snapshot, rounds
+  0..k-1 are exact-consensus pipeline fill, the sharded worker-row gather
+  runs as a ``launch.mesh.ring_gather`` ppermute ring (R-1 single-row
+  hops interleaved with the scan segments), and ``DPPFConfig.elastic``
+  adds bounded-async membership: a per-row participation mask rides the
+  carry, an inactive row freezes and drops out of the consensus weights
+  for up to k rounds, then rejoins with an EASGD-style catch-up pull
+  (``set_participation`` is the host-side driver hook).
 
 Step/round accounting is owned by ``repro.train.clock.RoundClock``
 (DESIGN.md §Round-clock): every builder reads lam_t via
@@ -67,8 +76,14 @@ class TrainState:
     opt: Any
     cstate: Any          # consensus state (EASGD center etc.)
     t: jnp.ndarray       # local-step counter (scalar int32)
-    snap: Any = None     # staleness-1 carry: {"x": (R, n) snapshot,
-                         # "losses": (M,), "gns": (M,)} (flat engine only)
+    snap: Any = None     # overlap carry (flat engine only). staleness1/
+                         # doublebuf: {"x": (R, n) snapshot, "losses": (M,),
+                         # "gns": (M,)}; staleness_k: a k-deep ring ordered
+                         # oldest -> newest — {"x": (k, R, n), "losses":
+                         # (k, M), "gns": (k, M)} plus, when elastic,
+                         # {"act": (k, M) participation at snapshot time,
+                         # "active": (M,) requested membership,
+                         # "missed": (M,) int32 consecutive misses}
     round: Any = None    # round counter (scalar int32) — the clock position;
                          # None on hand-built/DDP states (builders fall back
                          # to the pre-scan ``t // tau``)
@@ -174,7 +189,23 @@ def init_train_state(loss_params_init, opt: Optimizer, dcfg: DPPFConfig,
         params = engine.flatten(params)           # the ONE flatten per run
         opt_state = jax.vmap(opt.init)(engine.workers(params))
         cstate = consensus.init_state(dcfg.consensus, params, engine=engine)
-        if getattr(dcfg, "overlap", "none") != "none":
+        overlap_mode = getattr(dcfg, "overlap", "none")
+        if overlap_mode == "staleness_k":
+            # k-deep snapshot ring, oldest -> newest: slot 0 is the
+            # round-(r-k) snapshot whose consensus applies after round r's
+            # scan; rounds 0..k-1 are exact-consensus pipeline fill. The
+            # + 0.0 copy keeps the ring and params donation-distinct.
+            k = dcfg.staleness
+            snap = {"x": jnp.broadcast_to(
+                        params[None], (k,) + params.shape) + 0.0,
+                    "losses": jnp.zeros((k, n_workers), jnp.float32),
+                    "gns": jnp.ones((k, n_workers), jnp.float32)}
+            if dcfg.elastic:
+                snap.update(
+                    act=jnp.ones((k, n_workers), jnp.float32),
+                    active=jnp.ones((n_workers,), jnp.float32),
+                    missed=jnp.zeros((n_workers,), jnp.int32))
+        elif overlap_mode != "none":
             # round-0 snapshot: the (degenerate) init fleet. staleness1
             # gates the first delta off (explicit pipeline bubble, round 0
             # is local steps only); doublebuf instead runs an EXACT
@@ -195,6 +226,35 @@ def init_train_state(loss_params_init, opt: Optimizer, dcfg: DPPFConfig,
     return TrainState(params=params, opt=opt_state, cstate=cstate,
                       t=jnp.zeros((), jnp.int32), snap=snap,
                       round=jnp.zeros((), jnp.int32), engine=engine)
+
+
+def _row_select(active, new, old):
+    """Per-worker-row select: rows with ``active > 0`` take ``new``, the
+    rest keep ``old`` BIT-exactly (``jnp.where``, not arithmetic blending
+    — a frozen elastic row must not drift by even one ulp)."""
+    cond = (active > 0).reshape(active.shape + (1,) * (new.ndim - 1))
+    return jnp.where(cond, new, old)
+
+
+def set_participation(state: TrainState, active) -> TrainState:
+    """Host-side elastic-membership hook: set which worker rows take part
+    in the NEXT rounds (1 = active, 0 = dropped). The mask rides the
+    snapshot carry; a dropped row freezes (its local steps revert, its
+    pull/push coefficients zero, and its row leaves the consensus target
+    weights) until it is re-activated here — or until it has missed
+    ``dcfg.staleness`` consecutive rounds, when the bounded-staleness rule
+    forces it back in. Requires an elastic staleness_k state
+    (``DPPFConfig.elastic=True``)."""
+    if state.snap is None or "active" not in state.snap:
+        raise ValueError(
+            "set_participation requires an elastic staleness_k TrainState "
+            "(DPPFConfig.overlap='staleness_k', elastic=True)")
+    act = jnp.asarray(active, jnp.float32)
+    if act.shape != state.snap["active"].shape:
+        raise ValueError(
+            f"participation mask shape {act.shape} != "
+            f"{state.snap['active'].shape} (one entry per worker row)")
+    return dataclasses.replace(state, snap=dict(state.snap, active=act))
 
 
 def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
@@ -243,7 +303,7 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         # off-by-one that skipped round 0 and shifted the whole trajectory)
         round_idx = _round_index(state, dcfg)
         lam_t = clock.lam_at(round_idx)
-        stale_flag = jnp.float32(0.0)
+        staleness_depth = jnp.int32(0)
         if overlap_mode == "staleness1":
             # staleness-1: consensus of the PREVIOUS round's snapshot; its
             # collectives have no data dependence on this round's scan, so
@@ -260,7 +320,7 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             # noise-floor push (engine docstring) — skip the first delta
             live = (state.t > 0).astype(jnp.float32)
             params = params + live * (c_out - snap["x"])
-            stale_flag = live
+            staleness_depth = live.astype(jnp.int32)
         elif overlap_mode == "doublebuf":
             # double-buffered: the snapshot's stage-1 column contraction is
             # dispatched in ``overlap_chunks`` pieces with no data
@@ -299,7 +359,97 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
 
             params, metrics = jax.lax.cond(state.t > 0, _stale, _bubble,
                                            None)
-            stale_flag = (state.t > 0).astype(jnp.float32)
+            staleness_depth = (state.t > 0).astype(jnp.int32)
+        elif overlap_mode == "staleness_k":
+            # staleness-k pipeline (DESIGN.md §Overlap): the snapshot
+            # carry is a k-deep ring ordered oldest -> newest; slot 0
+            # holds the round-(r-k) snapshot whose consensus applies
+            # after THIS round's scan (doublebuf is the k=1 special case
+            # of the same recursion). Rounds 0..k-1 are pipeline fill:
+            # an EXACT consensus of the fresh post-scan view, gated by a
+            # traced cond on the carried round index (resume-correct).
+            k = dcfg.staleness
+            snap = state.snap
+            cstate = state.cstate
+            s_old = snap["x"][0]
+            sl, sg = snap["losses"][0], snap["gns"][0]
+            elastic = bool(getattr(dcfg, "elastic", False))
+            act_old = eff = None
+            if elastic:
+                active, missed = snap["active"], snap["missed"]
+                # bounded staleness: a row that already missed k rounds
+                # is forced back in this round
+                eff = jnp.where(missed >= k, jnp.float32(1.0), active)
+                act_old = snap["act"][0]
+                # dropped rows freeze: revert this round's local steps
+                # (params AND optimizer state) bit-exactly
+                params = engine.with_workers(
+                    params, _row_select(eff, engine.workers(params), p0))
+                opt_st = jax.tree.map(
+                    lambda nw, ow: _row_select(eff, nw, ow),
+                    opt_st, state.opt)
+            # the old slot's stage-1 contraction, chunked like doublebuf
+            # (under shard_map the matching ring-gather + psum chunks
+            # interleave with the scan — this is the single-shard
+            # reference of the same recursion)
+            stages, _ = consensus.lower_stages(
+                engine, dcfg, lam_t, losses=sl, grad_norms=sg,
+                mask=act_old)
+            T1 = stages[0][1]
+            n_eff = max(1, min(dcfg.overlap_chunks, engine.layout.n))
+            gram = None
+            for a, b in _chunk_bounds(engine.layout.n, n_eff):
+                part = engine.stage_comm(s_old[:, a:b], T1)
+                gram = part if gram is None else gram + part
+            q = params
+
+            def _stale(_):
+                c_out, _, m = consensus.apply_round(
+                    s_old, dcfg, lam_t, cstate, losses=sl, grad_norms=sg,
+                    engine=engine, first_gram=gram, mask=act_old)
+                return q + (c_out - s_old), m
+
+            def _fill(_):
+                new, _, m = consensus.apply_round(
+                    q, dcfg, lam_t, cstate, losses=losses[-1],
+                    grad_norms=gns[-1], engine=engine, mask=eff)
+                return new, m
+
+            params, metrics = jax.lax.cond(round_idx >= k, _stale, _fill,
+                                           None)
+            if elastic:
+                # reception gate: the stale delta was masked by the
+                # SNAPSHOT-time participation (act_old); a row inactive
+                # NOW must not receive it either — keep it at its frozen q
+                params = engine.with_workers(
+                    params,
+                    _row_select(eff, engine.workers(params),
+                                engine.workers(q)))
+                # EASGD-style catch-up: a row rejoining after >= 1 missed
+                # rounds pulls toward the active-fleet mean
+                rejoin = eff * (missed > 0).astype(jnp.float32)
+                w = engine.workers(params)
+                mean = jnp.sum(eff[:, None] * w, axis=0) \
+                    / jnp.maximum(jnp.sum(eff), 1.0)
+                w = w + (dcfg.elastic_catchup * rejoin)[:, None] \
+                    * (mean[None] - w)
+                params = engine.with_workers(params, w)
+            # advance the ring: drop the consumed slot, append fresh q
+            new_snap = {
+                "x": jnp.concatenate([snap["x"][1:], q[None]], axis=0),
+                "losses": jnp.concatenate(
+                    [snap["losses"][1:], losses[-1][None]], axis=0),
+                "gns": jnp.concatenate(
+                    [snap["gns"][1:], gns[-1][None]], axis=0)}
+            if elastic:
+                new_snap.update(
+                    act=jnp.concatenate([snap["act"][1:], eff[None]],
+                                        axis=0),
+                    active=active,
+                    missed=jnp.where(eff > 0, 0, missed + 1)
+                    .astype(jnp.int32))
+            staleness_depth = jnp.where(round_idx >= k, k, 0) \
+                .astype(jnp.int32)
         else:
             params, cstate, metrics = consensus.apply_round(
                 params, dcfg, lam_t, state.cstate,
@@ -308,7 +458,7 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         metrics = dict(metrics)
         metrics["train_loss"] = losses.mean()
         metrics["lam_t"] = lam_t
-        metrics["stale"] = stale_flag
+        metrics["staleness"] = staleness_depth
         new_state = TrainState(params=params, opt=opt_st, cstate=cstate, t=t,
                                snap=new_snap,
                                round=jnp.asarray(round_idx + 1, jnp.int32),
@@ -373,9 +523,21 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
     gather: each device applies its own rows of the delta). Round 0 is
     the pipeline-fill bubble and applies an EXACT consensus of the fresh
     view (DESIGN.md §Overlap).
+
+    ``dcfg.overlap == "staleness_k"`` runs the k-deep generalization of
+    the same recursion: the snapshot carry is a ring of ``k`` row-sharded
+    buffers (oldest -> newest), each chunk's worker-row gather runs as a
+    ``launch.mesh.ring_gather`` ppermute ring (R-1 hops of one local row
+    block, bit-for-bit the tiled all_gather concatenation order, so
+    precise-mode parity is preserved while the peak per-hop payload drops
+    by 1/R), and rounds 0..k-1 fill the pipeline with exact consensus.
+    ``dcfg.elastic`` threads the per-row participation mask through the
+    same carry on flat Wx1 and hierarchical WxFxM meshes.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.launch.mesh import ring_gather
 
     if clock is None:
         clock = _legacy_clock(dcfg, base_lr, total_steps, warmup,
@@ -383,6 +545,9 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
     overlap_mode = getattr(dcfg, "overlap", "none")
     stale1 = overlap_mode == "staleness1"
     dbuf = overlap_mode == "doublebuf"
+    sk = overlap_mode == "staleness_k"
+    k_depth = getattr(dcfg, "staleness", 1)
+    elastic = sk and bool(getattr(dcfg, "elastic", False))
     row_axes = tuple(plan.worker_axes)
     sizes = dict(mesh.shape)
     row_size = math.prod(sizes[a] for a in row_axes) if row_axes else 1
@@ -421,6 +586,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             rest = list(rest)
             aux_loc = rest.pop(0) if aux else None
             snap_x = snap_aux = snap_l = snap_g = None
+            act_ring = active = missed = None
             if stale1:
                 snap_x, snap_l, snap_g = rest
             elif dbuf:
@@ -428,6 +594,16 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 if aux:
                     snap_aux = rest.pop(0)       # (aux, n_loc)
                 snap_l, snap_g = rest
+            elif sk:
+                snap_x = rest.pop(0)        # (k, m_loc, n_loc) row-sharded
+                if aux:
+                    snap_aux = rest.pop(0)       # (k, aux, n_loc)
+                snap_l = rest.pop(0)             # (k, M)
+                snap_g = rest.pop(0)             # (k, M)
+                if elastic:
+                    act_ring = rest.pop(0)       # (k, M)
+                    active = rest.pop(0)         # (M,)
+                    missed = rest.pop(0)         # (M,) int32
 
             # clock position of the round about to mix (pre-scan index —
             # same off-by-one fix as make_round_step)
@@ -436,14 +612,24 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             w_full = jax.lax.all_gather(w_loc, eff_cols, axis=1, tiled=True) \
                 if eff_cols else w_loc
 
-            if dbuf:
+            if dbuf or sk:
                 # the tau local steps split into n_eff segments; ahead of
-                # each segment one column chunk of the round-(k-1)
+                # each segment one column chunk of the round-(r-k)
                 # snapshot's worker-row gather + stage-1 contraction psum
                 # is dispatched — no data dependence on the scan, so the
-                # collectives run under the segment's compute
+                # collectives run under the segment's compute. staleness_k
+                # consumes ring slot 0 (the oldest snapshot) and moves
+                # each chunk over the ppermute ring: R-1 single-row-block
+                # hops instead of one monolithic all-gather, identical
+                # concatenation order (launch.mesh.ring_gather contract)
+                sx0 = snap_x[0] if sk else snap_x       # (m_loc, n_loc)
+                sa0 = (snap_aux[0] if sk else snap_aux) if aux else None
+                sl0 = snap_l[0] if sk else snap_l
+                sg0 = snap_g[0] if sk else snap_g
+                act0 = act_ring[0] if elastic else None
                 stages, _ = consensus.lower_stages(
-                    s_engine, dcfg, lam_t, losses=snap_l, grad_norms=snap_g)
+                    s_engine, dcfg, lam_t, losses=sl0, grad_norms=sg0,
+                    mask=act0)
                 T1 = stages[0][1]
                 n_eff = max(1, min(dcfg.overlap_chunks, tau, n_loc))
                 gram, gath = None, []
@@ -451,13 +637,15 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 l_parts, g_parts = [], []
                 for (ca, cz), (sa, sz) in zip(_chunk_bounds(n_loc, n_eff),
                                               _chunk_bounds(tau, n_eff)):
-                    piece = snap_x[:, ca:cz]
+                    piece = sx0[:, ca:cz]
                     if row_size > 1:
-                        piece = jax.lax.all_gather(piece, row_axes, axis=0,
-                                                   tiled=True)
+                        piece = ring_gather(
+                            piece, row_axes, world=row_size, axis=0) \
+                            if sk else jax.lax.all_gather(
+                                piece, row_axes, axis=0, tiled=True)
                     if aux:
                         piece = jnp.concatenate(
-                            [piece, snap_aux[:, ca:cz]], axis=0)
+                            [piece, sa0[:, ca:cz]], axis=0)
                     gath.append(piece)
                     part = s_engine.stage_comm(piece, T1)
                     gram = part if gram is None else gram + part
@@ -475,6 +663,24 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                     loss, opt, w_full, opt_loc, t0, b_loc, clock=clock,
                     sam_rho=sam_rho)
 
+            eff = eff_loc = None
+            r_off = 0
+            if elastic:
+                # bounded staleness: a row that already missed k rounds is
+                # forced back in; dropped rows freeze bit-exactly (local
+                # steps revert on params AND optimizer state)
+                eff = jnp.where(missed >= k_depth, jnp.float32(1.0), active)
+                if row_size > 1:
+                    r_off = _lin_index(row_axes, sizes) * m_loc
+                    eff_loc = jax.lax.dynamic_slice_in_dim(
+                        eff, r_off, m_loc, 0)
+                else:
+                    eff_loc = eff
+                params = _row_select(eff_loc, params, w_full)
+                opt_st = jax.tree.map(
+                    lambda nw, ow: _row_select(eff_loc, nw, ow),
+                    opt_st, opt_loc)
+
             # round boundary: back to own columns
             if eff_cols:
                 c_idx = _lin_index(eff_cols, sizes)
@@ -488,12 +694,18 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             else:
                 l_last, g_last = losses[-1], gns[-1]
 
-            def gather_rows(x_loc):
+            def gather_rows(x_loc, *, ring=False):
                 """Own-column worker rows + aux -> the full (R, n_loc)
-                view (THE consensus all-reduce of the paper)."""
-                rows = jax.lax.all_gather(x_loc, row_axes, axis=0,
-                                          tiled=True) if row_size > 1 \
-                    else x_loc
+                view (THE consensus all-reduce of the paper). With
+                ``ring=True`` the gather runs over the ppermute ring
+                (bit-identical result, R-1 one-block hops)."""
+                if row_size > 1:
+                    rows = ring_gather(x_loc, row_axes, world=row_size,
+                                       axis=0) if ring \
+                        else jax.lax.all_gather(x_loc, row_axes, axis=0,
+                                                tiled=True)
+                else:
+                    rows = x_loc
                 return jnp.concatenate([rows, aux_loc], axis=0) if aux \
                     else rows
 
@@ -505,37 +717,64 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                         m_loc, 0)
                 return full[:M]
 
-            if dbuf:
+            if dbuf or sk:
                 # boundary: coefficient math + mix GEMM only. The delta is
                 # applied shard-locally (own worker rows + aux) — no fresh
-                # row gather; the new snapshot is the row-SHARDED q.
+                # row gather; the new snapshot is the row-SHARDED q
+                # (staleness_k: appended to the ring, displacing slot 0).
                 def _stale(_):
                     c_out, _, m = consensus.apply_round(
-                        s_full, dcfg, lam_t, state.cstate, losses=snap_l,
-                        grad_norms=snap_g, engine=s_engine, first_gram=gram)
+                        s_full, dcfg, lam_t, state.cstate, losses=sl0,
+                        grad_norms=sg0, engine=s_engine, first_gram=gram,
+                        mask=act0)
                     delta = c_out - s_full
                     outs = [q_loc + own_rows(delta)]
                     if aux:
                         outs.append(aux_loc + delta[M:])
                     return tuple(outs + [m])
 
-                def _bubble(_):
-                    # round-0 pipeline fill: EXACT consensus of the fresh q
-                    X = gather_rows(q_loc)
+                def _fill(_):
+                    # pipeline fill: EXACT consensus of the fresh q
+                    X = gather_rows(q_loc, ring=sk)
                     newX, _, m = consensus.apply_round(
                         X, dcfg, lam_t, state.cstate, losses=l_last,
-                        grad_norms=g_last, engine=s_engine)
+                        grad_norms=g_last, engine=s_engine, mask=eff)
                     outs = [own_rows(newX)]
                     if aux:
                         outs.append(newX[M:])
                     return tuple(outs + [m])
 
-                res = jax.lax.cond(t0 > 0, _stale, _bubble, None)
+                pred = (rnd0 >= k_depth) if sk else (t0 > 0)
+                res = jax.lax.cond(pred, _stale, _fill, None)
                 new_w = res[0]
                 new_aux = res[1] if aux else None
                 metrics = dict(res[-1])
-                new_snap_x, new_snap_aux = q_loc, aux_loc
-                stale_flag = (t0 > 0).astype(jnp.float32)
+                if elastic:
+                    # reception gate: a row inactive NOW keeps its frozen
+                    # q (the stale delta's mask is snapshot-time)
+                    new_w = _row_select(eff_loc, new_w, q_loc)
+                    # EASGD-style catch-up: a row rejoining after >= 1
+                    # missed rounds pulls toward the active-fleet mean
+                    rejoin = eff * (missed > 0).astype(jnp.float32)
+                    partial = jnp.sum(eff_loc[:, None] * new_w, axis=0)
+                    if row_size > 1:
+                        partial = jax.lax.psum(partial, row_axes)
+                    mean = partial / jnp.maximum(jnp.sum(eff), 1.0)
+                    cj = dcfg.elastic_catchup * rejoin
+                    cj_loc = jax.lax.dynamic_slice_in_dim(
+                        cj, r_off, m_loc, 0) if row_size > 1 else cj
+                    new_w = new_w + cj_loc[:, None] * (mean[None] - new_w)
+                if sk:
+                    new_snap_x = jnp.concatenate(
+                        [snap_x[1:], q_loc[None]], axis=0)
+                    new_snap_aux = jnp.concatenate(
+                        [snap_aux[1:], aux_loc[None]], axis=0) if aux \
+                        else None
+                    staleness_depth = jnp.where(
+                        rnd0 >= k_depth, k_depth, 0).astype(jnp.int32)
+                else:
+                    new_snap_x, new_snap_aux = q_loc, aux_loc
+                    staleness_depth = (t0 > 0).astype(jnp.int32)
             elif stale1:
                 X = gather_rows(q_loc)
                 c_out, cstate, metrics = consensus.apply_round(
@@ -548,7 +787,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 new_w = own_rows(newX)
                 new_aux = newX[M:] if aux else None
                 metrics = dict(metrics)
-                stale_flag = live
+                staleness_depth = live.astype(jnp.int32)
             else:
                 X = gather_rows(q_loc)
                 newX, cstate, metrics = consensus.apply_round(
@@ -558,14 +797,14 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 new_w = own_rows(newX)
                 new_aux = newX[M:] if aux else None
                 metrics = dict(metrics)
-                stale_flag = jnp.float32(0.0)
+                staleness_depth = jnp.int32(0)
 
             train_loss = losses.mean()
             if row_size > 1:
                 train_loss = jax.lax.pmean(train_loss, row_axes)
             metrics["train_loss"] = train_loss
             metrics["lam_t"] = lam_t
-            metrics["stale"] = stale_flag
+            metrics["staleness"] = staleness_depth
             outs = [new_w, opt_st, t, rnd0 + 1, metrics]
             if aux:
                 outs.append(new_aux)
@@ -576,6 +815,19 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 if aux:
                     outs.append(new_snap_aux)
                 outs.extend([l_last, g_last])
+            elif sk:
+                outs.append(new_snap_x)
+                if aux:
+                    outs.append(new_snap_aux)
+                outs.extend([
+                    jnp.concatenate([snap_l[1:], l_last[None]], axis=0),
+                    jnp.concatenate([snap_g[1:], g_last[None]], axis=0)])
+                if elastic:
+                    outs.extend([
+                        jnp.concatenate([act_ring[1:], eff[None]], axis=0),
+                        active,
+                        jnp.where(eff > 0, 0, missed + 1)
+                        .astype(jnp.int32)])
             return tuple(outs)
 
         opt_in = jax.tree.map(lambda l: leading_dim_spec(l, row_e), state.opt)
@@ -583,7 +835,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                                 batch)
         metric_out = {k: P() for k in ("consensus_dist", "pre_dist",
                                        "pull_force", "push_force",
-                                       "train_loss", "lam_t", "stale")}
+                                       "train_loss", "lam_t", "staleness")}
         rnd0 = jnp.asarray(_round_index(state, dcfg), jnp.int32)
         args = [engine.workers(state.params), state.opt, state.t, rnd0,
                 batch]
@@ -613,6 +865,25 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             args.extend([state.snap["losses"], state.snap["gns"]])
             in_specs.extend([P(), P()])
             out_specs.extend([P(), P()])
+        elif sk:
+            # the snapshot RING enters row-sharded per slot (ring dim
+            # replicated); aux slabs columns-only; losses/gns/elastic
+            # vectors replicated
+            args.append(state.snap["x"][:, :M])
+            in_specs.append(P(None, row_e, col_e))
+            out_specs.append(P(None, row_e, col_e))
+            if aux:
+                args.append(state.snap["x"][:, M:])
+                in_specs.append(P(None, None, col_e))
+                out_specs.append(P(None, None, col_e))
+            args.extend([state.snap["losses"], state.snap["gns"]])
+            in_specs.extend([P(), P()])
+            out_specs.extend([P(), P()])
+            if elastic:
+                args.extend([state.snap["act"], state.snap["active"],
+                             state.snap["missed"]])
+                in_specs.extend([P(), P(), P()])
+                out_specs.extend([P(), P(), P()])
 
         res = list(shard_map(
             mapped, mesh=mesh, in_specs=tuple(in_specs),
@@ -628,6 +899,14 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             if aux:
                 sx = jnp.concatenate([sx, rest.pop(0)], axis=0)
             snap = {"x": sx, "losses": rest[0], "gns": rest[1]}
+        elif sk:
+            sx = rest.pop(0)
+            if aux:
+                sx = jnp.concatenate([sx, rest.pop(0)], axis=1)
+            snap = {"x": sx, "losses": rest.pop(0), "gns": rest.pop(0)}
+            if elastic:
+                snap.update(act=rest.pop(0), active=rest.pop(0),
+                            missed=rest.pop(0))
         else:
             snap = state.snap
         new_state = TrainState(params=params, opt=opt_st,
@@ -666,17 +945,18 @@ def shard_train_state(state: TrainState, mesh, plan, *, dcfg=None):
         state.params, flat_view_sharding(mesh, state.params.shape, plan))
     snap = state.snap
     if snap is not None:
-        col_e = flat_col_entry(mesh, snap["x"].shape[1], plan)
-        if getattr(dcfg, "overlap", None) == "doublebuf":
-            # worker rows sharded like the live view (aux rows keep the
-            # flat-view fallback: replicated when they break divisibility)
+        col_e = flat_col_entry(mesh, snap["x"].shape[-1], plan)
+        if snap["x"].ndim == 3 or \
+                getattr(dcfg, "overlap", None) == "doublebuf":
+            # doublebuf / the staleness_k ring (3-D snap): worker rows
+            # sharded like the live view (aux rows keep the flat-view
+            # fallback: replicated when they break divisibility)
             x = jax.device_put(
                 snap["x"], flat_view_sharding(mesh, snap["x"].shape, plan))
         else:
             x = put(snap["x"], P(None, col_e))
-        snap = {"x": x,
-                "losses": put(snap["losses"], P()),
-                "gns": put(snap["gns"], P())}
+        snap = dict({key: put(v, P()) for key, v in snap.items()
+                     if key != "x"}, x=x)
     rnd = put(state.round, P()) if state.round is not None else None
     return TrainState(params=params, opt=jax.tree.map(opt_put, state.opt),
                       cstate=state.cstate, t=put(state.t, P()), snap=snap,
@@ -724,7 +1004,7 @@ def make_ddp_step(loss_fn, opt: Optimizer, *,
         return new_state, {"train_loss": losses.mean(),
                            "consensus_dist": zero, "pre_dist": zero,
                            "pull_force": zero, "push_force": zero,
-                           "lam_t": zero, "stale": zero}
+                           "lam_t": zero, "staleness": jnp.int32(0)}
 
     return step
 

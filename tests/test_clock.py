@@ -90,7 +90,7 @@ def test_describe_returns_full_round_plan():
 def test_plan_table_renders_and_elides():
     clock = RoundClock(total_steps=10, tau=4, base_lr=0.1)
     table = clock.plan_table()
-    assert "| round | start | tau | lam | lr window |" in table
+    assert "| round | start | tau | lam | lr window | staleness |" in table
     assert table.count("\n") == 2 + 3  # header x3 + one line per round
     long = RoundClock(total_steps=400, tau=4, base_lr=0.1)
     elided = long.plan_table(max_rows=6)
@@ -153,6 +153,50 @@ def test_qsr_overlap_uses_stale_lr():
             assert spec.tau == want, (spec, want)
     # overlap="none" keeps the pinned worked example untouched
     assert exact.taus() == (4, 4, 4, 4, 4, 4, 4, 4, 7, 16, 9)
+
+
+def test_qsr_staleness_k_looks_back_k_rounds():
+    """staleness_k QSR: round r applies round r-k's iterate, so its tau is
+    ruled by the LR from k rounds back; k=1 reproduces the staleness1
+    plan exactly, and describe()/plan_table() carry the depth (fill
+    rounds 0..k-1 report depth 0)."""
+    from repro.core.schedules import qsr_tau
+    from repro.train.clock import _host_cosine_lr
+    s1 = RoundClock(total_steps=64, tau=4, base_lr=0.3,
+                    tau_schedule="qsr", qsr_beta=0.4, overlap="staleness1")
+    k1 = RoundClock(total_steps=64, tau=4, base_lr=0.3,
+                    tau_schedule="qsr", qsr_beta=0.4,
+                    overlap="staleness_k", staleness=1)
+    assert k1.taus() == s1.taus()
+    assert k1.staleness_depth == 1 and s1.staleness_depth == 1
+    k2 = RoundClock(total_steps=64, tau=4, base_lr=0.3,
+                    tau_schedule="qsr", qsr_beta=0.4,
+                    overlap="staleness_k", staleness=2)
+    assert sum(k2.taus()) == 64 and k2.staleness_depth == 2
+    for i, spec in enumerate(k2.rounds):
+        if i < 2:
+            continue
+        eta = _host_cosine_lr(0.3, k2.rounds[i - 2].start, 64, 0)
+        want = min(qsr_tau(eta, 4, 0.4), 64 - spec.start)
+        assert spec.tau == want, (spec, want)
+    d = k2.describe()
+    assert d["overlap"] == "staleness_k" and d["staleness"] == 2
+    assert [r["staleness"] for r in d["plan"][:3]] == [0, 0, 2]
+    assert "(k=2)" in k2.plan_table()
+
+
+def test_staleness_k_warmup_validation():
+    """A k-deep pipeline needs at least k warmup rounds of exact fill:
+    warmup shorter than k rounds raises; exactly k rounds passes."""
+    with pytest.raises(ValueError, match="warmup"):
+        RoundClock(total_steps=64, tau=4, base_lr=0.3, warmup=4,
+                   overlap="staleness_k", staleness=2)
+    clock = RoundClock(total_steps=64, tau=4, base_lr=0.3, warmup=8,
+                       overlap="staleness_k", staleness=2)
+    assert clock.describe()["warmup_rounds"] >= 2
+    # depth validation rides the config path too
+    with pytest.raises(ValueError, match="staleness"):
+        DPPFConfig(engine="flat", overlap="staleness_k", staleness=0)
     # from_config plumbs the overlap mode through
     dcfg = DPPFConfig(tau=4, engine="flat", overlap="doublebuf",
                       tau_schedule="qsr", qsr_beta=0.4)
@@ -388,11 +432,12 @@ def test_round_metrics_logger_jsonl(tmp_path):
     from repro.train import RoundMetricsLogger, RoundSpec
     path = str(tmp_path / "rounds.jsonl")
     with RoundMetricsLogger(path) as log:
+        # a legacy "stale" flag maps onto the unified "staleness" key
         row = log(RoundSpec(index=0, start=0, tau=4),
                   {"consensus_dist": jnp.float32(1.5), "stale": 0.0,
                    "note": "x"})
         assert row == {"round": 0, "start": 0, "tau": 4,
-                       "consensus_dist": 1.5, "stale": 0.0, "note": "x"}
+                       "consensus_dist": 1.5, "staleness": 0.0, "note": "x"}
         log(3, {"train_loss": 2.0})
     lines = [json.loads(l) for l in open(path)]
     assert len(lines) == 2
@@ -402,8 +447,8 @@ def test_round_metrics_logger_jsonl(tmp_path):
 
 def test_launcher_log_every_round_jsonl(tmp_path):
     """--log-every-round through the real launcher: one line per plan
-    round with the unified schema (stale flag included) for a doublebuf
-    run, and one line per STEP for the ddp branch."""
+    round with the unified schema (staleness depth included) for a
+    doublebuf run, and one line per STEP for the ddp branch."""
     import json
     from repro.launch.train import main
     path = str(tmp_path / "rounds.jsonl")
@@ -420,11 +465,11 @@ def test_launcher_log_every_round_jsonl(tmp_path):
         assert (got["round"], got["start"], got["tau"]) == (
             want.index, want.start, want.tau)
         for k in ("consensus_dist", "pre_dist", "pull_force", "push_force",
-                  "train_loss", "lam_t", "stale"):
+                  "train_loss", "lam_t", "staleness"):
             assert k in got, k
-    # the bubble round is exact (stale 0), the steady state stale
-    assert rows[0]["stale"] == 0.0
-    assert all(r["stale"] == 1.0 for r in rows[1:])
+    # the bubble round is exact (depth 0), the steady state depth-1 stale
+    assert rows[0]["staleness"] == 0.0
+    assert all(r["staleness"] == 1.0 for r in rows[1:])
 
     ddp_path = str(tmp_path / "ddp.jsonl")
     loss = main(["--arch", "yi-6b", "--smoke", "--workers", "2",
@@ -433,7 +478,7 @@ def test_launcher_log_every_round_jsonl(tmp_path):
     assert np.isfinite(loss)
     rows = [json.loads(l) for l in open(ddp_path)]
     assert len(rows) == 3 and all(r["tau"] == 1 for r in rows)
-    assert all(r["stale"] == 0.0 and r["consensus_dist"] == 0.0
+    assert all(r["staleness"] == 0.0 and r["consensus_dist"] == 0.0
                for r in rows)
 
 

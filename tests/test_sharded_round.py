@@ -281,11 +281,11 @@ def test_doublebuf_round0_bubble_is_exact_consensus():
                                np.asarray(st_ex.params), atol=1e-6, rtol=0)
     # ... and NOT the staleness1 skip (the consensus really applied)
     assert float(jnp.max(jnp.abs(st_db.params - st_s1.params))) > 1e-3
-    # the stale flag marks the bubble from the steady state
-    assert float(m_db["stale"]) == 0.0 and float(m_s1["stale"]) == 0.0
+    # the staleness depth marks the bubble from the steady state
+    assert float(m_db["staleness"]) == 0.0 and float(m_s1["staleness"]) == 0.0
     st_db, m_db = jax.jit(make_round_step(loss, opt, d_db, base_lr=0.05,
                                           total_steps=20))(st_db, batches(1))
-    assert float(m_db["stale"]) == 1.0
+    assert float(m_db["staleness"]) == 1.0
 
 
 def test_doublebuf_matches_two_buffer_reference():
@@ -611,7 +611,7 @@ def test_load_train_state_format_guard_and_snap_fallback(tmp_path):
         step_o = jax.jit(make_round_step(loss, opt, dcfg_o, base_lr=0.05,
                                          total_steps=20))
         cont, m = step_o(resumed, batches(1))
-        assert float(m["stale"]) == 1.0
+        assert float(m["staleness"]) == 1.0
         assert np.isfinite(float(m["consensus_dist"]))
 
 
@@ -746,7 +746,7 @@ fmesh = Mesh(np.asarray(jax.devices()).reshape(8, 1), ("data", "model"))
 fplan = MeshPlan(worker_axes=("data",), model_axes=("model",))
 hmesh, hplan = make_hier_engine_mesh(2, 2, 2)
 MK = ("consensus_dist", "pre_dist", "pull_force", "push_force",
-      "train_loss", "lam_t", "stale")
+      "train_loss", "lam_t", "staleness")
 
 def run_pair(mesh, plan, dcfg_s1, dcfg_db, engine_patch=None, rounds=4):
     st0 = init_train_state(p0, opt, dcfg_s1, M, key)
@@ -819,9 +819,9 @@ f_ex = jax.jit(make_sharded_round_step(mlp_loss, opt, d_ex, mesh=hmesh,
 st_db, m_db = f_db(st_db, batches(0))
 st_ex, _ = f_ex(st_ex, batches(0))
 dp = float(jnp.max(jnp.abs(st_db.params - st_ex.params)))
-assert dp <= 1e-6 and float(m_db["stale"]) == 0.0, (dp, m_db)
+assert dp <= 1e-6 and float(m_db["staleness"]) == 0.0, (dp, m_db)
 st_db, m_db = f_db(st_db, batches(1))
-assert float(m_db["stale"]) == 1.0
+assert float(m_db["staleness"]) == 1.0
 print("doublebuf bubble OK")
 print("ALL OK")
 """
