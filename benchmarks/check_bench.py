@@ -20,6 +20,13 @@ bit-parity booleans pinning ``ring_bytes_per_hop <= gather_bytes`` and the
 ordering; ``us_ring``/``us_gather``/``speedup_staleness_k`` ride the
 timing prefixes.
 
+The ``method_zoo`` key (also in ``BENCH_overlap.json``) is registry
+driven: its ``method_names`` list and per-method dict KEYS are structural
+— registering/renaming a consensus method in ``core/methods.py`` must
+regenerate the committed baseline — while each method's ``us_per_round``
+rides the ``us_`` timing prefix automatically (no per-method allowlist
+here).
+
 CI usage (the microbench smoke step overwrites the repo-root files, so the
 baselines are stashed first). ``--baseline``/``--fresh`` repeat and are
 zipped into pairs:

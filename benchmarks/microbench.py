@@ -427,6 +427,52 @@ def bench_ring_round(*, smoke=False):
     return out
 
 
+def bench_method_zoo(*, smoke=False):
+    """One flat-engine round per REGISTERED consensus method on the same
+    model/optimizer/tau: the method-zoo cost matrix. Methods come from
+    the registry (``core.methods.method_names``), so a newly registered
+    method lands a row here (and in the committed ``BENCH_overlap.json``
+    ``method_zoo`` key) without touching this file. The canonical name
+    LIST is structural (a registry change must regenerate the baseline);
+    ``us_per_round`` rides the ``us_`` timing prefix. ddp has no round —
+    its row times tau per-step gradient-averaging steps instead."""
+    from repro.core.methods import get_method, method_names
+    data = default_data()
+    opt = make_optimizer("sgd")
+    M, bs, tau = 8, 16 if smoke else 64, 4
+    n_it = 3 if smoke else 20
+    init = lambda k: mlp_init(k, data["dim"], data["n_classes"])
+    batch = {"x": jnp.zeros((tau, M, bs, data["dim"])),
+             "y": jnp.zeros((tau, M, bs), jnp.int32)}
+    names = method_names(aliases=False)
+    out = {"workers": M, "tau": tau, "engine": "flat",
+           "method_names": list(names), "methods": {}}
+    for name in names:
+        spec = get_method(name)
+        if not spec.communicates:     # ddp: tau per-step grad averages
+            p0 = init(jax.random.PRNGKey(0))
+            st = TrainState(params=p0, opt=opt.init(p0), cstate={},
+                            t=jnp.zeros((), jnp.int32))
+            fn = jax.jit(make_ddp_step(mlp_loss, opt, base_lr=0.05,
+                                       total_steps=100))
+            db = jax.tree.map(lambda a: a[0], batch)
+            us = _time(lambda s, b: fn(s, b)[0], st, db, n=n_it) * tau
+        else:
+            dcfg = DPPFConfig(consensus=name, alpha=0.1, lam=0.5, tau=tau,
+                              engine="flat")
+            st = init_train_state(init, opt, dcfg, M, jax.random.PRNGKey(0))
+            fn = jax.jit(make_round_step(mlp_loss, opt, dcfg, base_lr=0.05,
+                                         total_steps=100), donate_argnums=0)
+            us = _time_donated(lambda s: fn(s, batch)[0], st, n=n_it)
+        out["methods"][name] = {"us_per_round": round(us, 1)}
+        csv("microbench", op=f"method_zoo_{name}", us_per_round=round(us, 1),
+            aux_rows=spec.aux_rows, communicates=spec.communicates)
+    csv("microbench", op="method_zoo", methods=len(names),
+        note="one flat-engine round per registered method (ddp = tau "
+             "per-step grad averages); registry-driven rows")
+    return out
+
+
 def bench_roundclock(*, smoke=False):
     """QSR RoundClock vs fixed tau: communication rounds (= consensus
     all-reduces) saved at the same step budget, and the wall cost of the
@@ -477,6 +523,7 @@ def run(*, smoke=False):
     hier_row = bench_hierarchical_round(smoke=smoke)
     overlap_row = bench_overlap_round(smoke=smoke)
     ring_row = bench_ring_round(smoke=smoke)
+    zoo_row = bench_method_zoo(smoke=smoke)
     roundclock = bench_roundclock(smoke=smoke)
     # machine-readable perf trajectory across PRs (repo root)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -496,7 +543,8 @@ def run(*, smoke=False):
     with open(opath, "w") as f:
         json.dump({"smoke": smoke, "backend": jax.default_backend(),
                    "overlap_round": overlap_row,
-                   "ring_gather": ring_row}, f, indent=2,
+                   "ring_gather": ring_row,
+                   "method_zoo": zoo_row}, f, indent=2,
                   sort_keys=True)
         f.write("\n")
     print(f"wrote {opath}")

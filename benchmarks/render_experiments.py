@@ -311,6 +311,42 @@ def serving_section():
     return "\n".join(out)
 
 
+def zoo_section():
+    """Render the committed ``results/method_zoo.json``: every registered
+    consensus method under heterogeneous workers (Dirichlet label skew +
+    speed skew), with the Mean Valley width per method."""
+    path = os.path.join(ROOT, "results", "method_zoo.json")
+    if not os.path.exists(path):
+        return ("*(`results/method_zoo.json` not committed yet — run "
+                "`PYTHONPATH=src:. python -m benchmarks.run "
+                "--only method_zoo` and commit it alongside the "
+                "re-rendered file.)*")
+    with open(path) as f:
+        zoo = json.load(f)
+    cfg = zoo["config"]
+    speeds = "/".join(f"{s:g}" for s in cfg["speeds"])
+    out = [
+        f"Committed run: `results/method_zoo.json` — {cfg['workers']} "
+        f"workers, Dirichlet({cfg['dir_alpha']}) label skew, per-worker "
+        f"speeds {speeds} (a speed-s worker refreshes its batch on only "
+        f"`round(tau * s)` of its tau local steps), {cfg['steps']} steps, "
+        f"the shared flat-engine trainer for every method "
+        f"(`benchmarks/table5_noniid.py::run_zoo`). `mean_valley` is the "
+        f"paper's Alg. 2 width from the worker average; ddp trains ONE "
+        f"model, so it has no worker spread to measure.",
+        "",
+        "| method | test err % | gen gap | consensus dist | mean_valley |"
+        " flags |",
+        "|---|---|---|---|---|---|",
+    ]
+    for name, row in zoo["methods"].items():
+        mv = "—" if row["mean_valley"] is None else f"{row['mean_valley']}"
+        out.append(
+            f"| {name} | {row['test_err']} | {row['gen_gap']} | "
+            f"{row['consensus_dist']} | {mv} | {row['flags']} |")
+    return "\n".join(out)
+
+
 MISSING_DRYRUN = (
     "*(dry-run records not present — populate `results/dryrun/` with "
     "`PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both` "
@@ -353,6 +389,17 @@ def render() -> str:
         "## Round-clock / engine benchmarks",
         "",
         bench_section(),
+        "",
+        "## Method zoo — heterogeneous workers (label + speed skew)",
+        "",
+        "Every consensus method registered in `core/methods.py` runs "
+        "through the SAME flat-engine trainer (one `MethodSpec` entry per "
+        "method — DESIGN.md §Method-registry), so the zoo is a config "
+        "sweep, not a code fork: the registry declares each method's "
+        "target-weight rule, aux-row contract, push source, and round "
+        "plan, and the generic lowering does the rest.",
+        "",
+        zoo_section(),
         "",
         "## Serving — continuous batching vs static, prefill/decode "
         "roofline",

@@ -19,8 +19,8 @@ ARTIFACTS = {
     "microbench": (
         "—", "benchmarks/microbench.py",
         "hot-path microbenches (engine_vs_tree, sharded_round, "
-        "hierarchical_round, overlap_round, roundclock); writes "
-        "BENCH_roundclock.json + BENCH_overlap.json"),
+        "hierarchical_round, overlap_round, method_zoo, roundclock); "
+        "writes BENCH_roundclock.json + BENCH_overlap.json"),
     "theorem1": (
         "Thm. 1", "benchmarks/theorem1_width.py",
         "asymptotic valley width -> lambda/alpha on the proof recurrence "
@@ -46,6 +46,11 @@ ARTIFACTS = {
         "Table 5", "benchmarks/table5_noniid.py",
         "non-IID FL: SCAFFOLD / FedLESAM with and without DPPF "
         "aggregation"),
+    "method_zoo": (
+        "§2 related methods", "benchmarks/table5_noniid.py",
+        "heterogeneous-worker zoo: every registered consensus method "
+        "(core.methods) under Dirichlet label skew + speed skew, with "
+        "Mean Valley width per method; writes results/method_zoo.json"),
     "ablate_schedule": (
         "§C.2 + §7.2", "benchmarks/ablate_schedule.py",
         "lambda-schedule ablation (fixed/increasing/decreasing) plus the "
@@ -88,6 +93,9 @@ def main() -> None:
         "table3": lambda: table3_softconsensus.run(steps=150 if fast else 400),
         "table4": lambda: table4_sam.run(steps=150 if fast else 400),
         "table5": lambda: table5_noniid.run(rounds=8 if fast else 25),
+        "method_zoo": lambda: table5_noniid.run_zoo(
+            steps=80 if fast else 240,
+            out_json="" if fast else "results/method_zoo.json"),
         "ablate_schedule": lambda: ablate_schedule.run(
             steps=150 if fast else 400),
         "ablate_second_term": lambda: ablate_second_term.run(

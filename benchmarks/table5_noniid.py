@@ -1,15 +1,34 @@
 """Paper Table 5 / §8.3: non-IID FL — SCAFFOLD and FedLESAM with and
-without the DPPF aggregation, under Dirichlet(0.1 / 0.6) splits."""
+without the DPPF aggregation, under Dirichlet(0.1 / 0.6) splits.
+
+Plus the heterogeneous-worker METHOD ZOO (`run_zoo` / the `method_zoo`
+suite): every registered consensus method from `core.methods` trained by
+the shared flat-engine trainer under per-worker label skew
+(Dirichlet-partitioned shards) and speed skew (slow workers refresh their
+batch less often inside a round, so a fraction of their tau local steps
+recompute a stale gradient), recording test error, generalization gap,
+consensus distance, and the Mean Valley width (paper Alg. 2) per method.
+Writes the committed ``results/method_zoo.json`` that
+``render_experiments.py`` turns into the EXPERIMENTS.md §Method-zoo
+table."""
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import csv, default_data, error_pct, mlp_init, mlp_loss
+from benchmarks.common import (
+    csv, default_data, error_pct, mlp_init, mlp_loss,
+)
 from repro.configs import DPPFConfig
 from repro.core import fl
+from repro.core import pullpush as pp
+from repro.core.methods import get_method, method_names
 from repro.core.schedules import lam_schedule
+from repro.core.valley import mean_valley
 
 SEEDS = (182, 437)
 
@@ -75,5 +94,133 @@ def run(rounds=25, M=4):
     return out
 
 
+# ---------------------------------------------------------------------------
+# Heterogeneous-worker method zoo
+# ---------------------------------------------------------------------------
+
+ZOO_SPEEDS = (1.0, 1.0, 0.5, 0.25)   # per-worker speed skew (fresh-batch rate)
+
+
+def _zoo_batches(data, shards, rng, tau, bs, speeds):
+    """One round of per-worker batches under label + speed skew: worker m
+    draws from ITS Dirichlet shard, and only refreshes its batch on
+    ``ceil(t / (1/speed))`` boundaries — a speed-s worker computes
+    ``round(tau * s)`` fresh gradients per round and replays its last
+    batch for the rest (the stale-compute model of a straggler that
+    cannot keep the fleet's step cadence)."""
+    M = len(speeds)
+    x_tr, y_tr = np.asarray(data["x_train"]), np.asarray(data["y_train"])
+    xs = np.empty((tau, M, bs, x_tr.shape[1]), x_tr.dtype)
+    ys = np.empty((tau, M, bs), y_tr.dtype)
+    for m, s in enumerate(speeds):
+        fresh = max(1, int(round(tau * s)))
+        picks = [rng.choice(shards[m], size=bs, replace=False)
+                 for _ in range(fresh)]
+        for t in range(tau):
+            pick = picks[min(t * fresh // tau, fresh - 1)]
+            xs[t, m], ys[t, m] = x_tr[pick], y_tr[pick]
+    return {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
+
+
+def _zoo_config(method):
+    """Per-method DPPFConfig: the shared pull/push operating point from
+    the table-3 soft-consensus grid; method-specific behavior (hard's
+    alpha := 1, parle's ramp, lpf_sgd's filtered push, entropy_sgd's
+    inner plan) comes from the registry spec, not per-method tuning."""
+    spec = get_method(method)
+    if not spec.communicates:
+        return DPPFConfig(consensus=method)
+    return DPPFConfig(consensus=method, alpha=0.1, lam=0.5, tau=4,
+                      engine="flat")
+
+
+def _zoo_train(data, method, shards, *, steps, bs, lr, speeds, seed):
+    from repro.optim import make_optimizer
+    from repro.train import (
+        RoundClock, TrainState, average_params, init_train_state,
+        make_ddp_step, make_round_step, stacked_params,
+    )
+    M = len(speeds)
+    dcfg = _zoo_config(method)
+    key = jax.random.PRNGKey(seed)
+    opt = make_optimizer("sgd", momentum=0.9, weight_decay=1e-3)
+    p0 = lambda k: mlp_init(k, data["dim"], data["n_classes"])
+    rng = np.random.default_rng(seed + 1)
+
+    if not get_method(method).communicates:          # ddp: per-step path
+        params = p0(key)
+        state = TrainState(params=params, opt=opt.init(params), cstate={},
+                           t=jnp.zeros((), jnp.int32))
+        step_fn = jax.jit(make_ddp_step(mlp_loss, opt, base_lr=lr,
+                                        total_steps=steps))
+        tau = 4
+        for _ in range(steps // tau):
+            b = _zoo_batches(data, shards, rng, tau, bs, speeds)
+            for t in range(tau):
+                state, _ = step_fn(state, jax.tree.map(lambda a, t=t: a[t],
+                                                       b))
+        return state.params, None, 0.0
+
+    state = init_train_state(p0, opt, dcfg, M, key)
+    clock = RoundClock.from_config(dcfg, base_lr=lr, total_steps=steps)
+    step_fn = jax.jit(make_round_step(mlp_loss, opt, dcfg, clock=clock),
+                      donate_argnums=0)
+    for spec in clock.rounds:
+        b = _zoo_batches(data, shards, rng, spec.tau, bs, speeds)
+        state, _ = step_fn(state, b)
+    avg = average_params(state)
+    stacked = stacked_params(state)
+    workers = [jax.tree.map(lambda a, i=i: a[i], stacked) for i in range(M)]
+    cdist = float(pp.worker_dists(stacked).mean())
+    return avg, workers, cdist
+
+
+def run_zoo(steps=240, bs=48, lr=0.05, dir_alpha=0.3, speeds=ZOO_SPEEDS,
+            seed=0, out_json="results/method_zoo.json"):
+    """The full registered-method zoo under label + speed skew. One row
+    per canonical method; ``mean_valley`` is the paper's Alg. 2 width
+    from the average point along each worker direction (None for ddp —
+    a single model has no worker spread to measure)."""
+    data = default_data()
+    M = len(speeds)
+    shards = fl.dirichlet_partition(np.asarray(data["y_train"]), M,
+                                    dir_alpha, seed=seed)
+    loss_on_train = lambda p: mlp_loss(
+        p, {"x": jnp.asarray(data["x_train"]),
+            "y": jnp.asarray(data["y_train"])})[0]
+    out = {"config": {"steps": steps, "bs": bs, "lr": lr,
+                      "dir_alpha": dir_alpha, "speeds": list(speeds),
+                      "workers": M, "seed": seed},
+           "methods": {}}
+    for method in method_names(aliases=False):
+        avg, workers, cdist = _zoo_train(
+            data, method, shards, steps=steps, bs=bs, lr=lr,
+            speeds=speeds, seed=seed)
+        test_err = error_pct(avg, data["x_test"], data["y_test"])
+        train_err = error_pct(avg, data["x_train"], data["y_train"])
+        mv = None
+        if workers is not None and len(workers) > 1:
+            mv = mean_valley(loss_on_train, workers, kappa=2.0, step=0.05,
+                             max_steps=120)["mv"]
+        row = {"test_err": round(test_err, 2),
+               "gen_gap": round(test_err - train_err, 2),
+               "consensus_dist": round(cdist, 4),
+               "mean_valley": round(mv, 4) if mv is not None else None,
+               "flags": get_method(method).flags}
+        out["methods"][method] = row
+        csv("method_zoo", method=method, **{
+            k: v for k, v in row.items() if k != "flags"})
+    if out_json:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        path = os.path.join(root, out_json)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
+    return out
+
+
 if __name__ == "__main__":
     run()
+    run_zoo()

@@ -248,7 +248,10 @@ class DPPFConfig:
     lam: float = 0.5            # push strength lambda
     tau: int = 4                # communication period (local steps per round)
     lam_schedule: str = "increasing"   # fixed | increasing | decreasing (§C.2)
-    consensus: str = "simple_avg"       # simple_avg | easgd | lsgd | mgrawa | hard | ddp
+    consensus: str = "simple_avg"       # any repro.core.methods registry name
+                                        # (simple_avg/dppf, easgd, lsgd,
+                                        # mgrawa/grawa, hard, ddp, parle,
+                                        # lpf_sgd, entropy_sgd)
     push: bool = True           # False => vanilla soft-consensus baseline
     exact_second_term: bool = False     # keep T2 (ablation §D.1)
     # communication-period schedule (train.clock.RoundClock): "fixed" keeps
@@ -305,6 +308,15 @@ class DPPFConfig:
         # would train with a misconfigured engine/schedule/overlap)
         if self.engine not in ("tree", "flat"):
             raise ValueError(f"unknown consensus engine {self.engine!r}")
+        # registry lookup raises ValueError on an unknown method name; a
+        # local import keeps configs importable without pulling jax at
+        # module load
+        from repro.core.methods import get_method
+        spec = get_method(self.consensus)
+        if spec.requires_flat and self.engine != "flat":
+            raise ValueError(
+                f"consensus={self.consensus!r} requires engine='flat' "
+                "(its push force is a flat-view vector stage)")
         if self.tau_schedule not in ("fixed", "qsr"):
             raise ValueError(f"unknown tau schedule {self.tau_schedule!r}")
         if self.tau_schedule == "qsr" and self.qsr_beta <= 0:

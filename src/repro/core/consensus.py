@@ -5,19 +5,17 @@ Every method produces a consensus target x_C; the round update is
     push:  x_m <- x_m + lam (x_m - x_A)/||x_m - x_A||        (if DPPF)
 For simple_avg + push the two fuse into Eq. 5 (pullpush.pullpush).
 
-Methods:
-  simple_avg — x_C = x_A (soft LocalSGD; the paper's DPPF default)
-  hard       — x_C = x_A with alpha = 1 (LocalSGD, Stich'19)
-  easgd      — elastic center z: x_C = z; z <- z + beta * mean(x_m - z)
-  lsgd       — x_C = worker with lowest loss (Teng et al.'19)
-  mgrawa     — x_C = sum_m w_m x_m, w_m ∝ 1/||grad_m|| (Dimlioglu'24)
-  ddp        — no round-level consensus (per-step gradient averaging,
-               handled by the trainer); kept here for completeness.
+Methods are DATA: ``repro.core.methods`` registers a ``MethodSpec`` per
+method (target-weight rule, aux-row contract, coefficient flags, input
+needs) and this module lowers any spec to generic engine stages — there
+is no per-method branch here.  ``methods.method_names()`` lists the zoo
+(simple_avg/dppf, hard, easgd, lsgd, mgrawa/grawa, ddp, parle, lpf_sgd,
+entropy_sgd); DESIGN.md §Method-registry documents the schema.
 
 ``apply_round`` is the single entry point. With ``engine=None`` it runs the
 stacked-pytree reference path (the parity oracle); with a
-``repro.core.engine.ConsensusEngine`` it lowers the method to one or two
-(target-weights, coefficient) stages over the persistent flat view — the
+``repro.core.engine.ConsensusEngine`` it lowers the method to a short list
+of (target-weights, coefficient) stages over the persistent flat view — the
 production hot path (DESIGN.md §Consensus-engine). Both paths emit the SAME
 metrics pytree from every branch (stable under ``lax.scan``/loggers):
 ``consensus_dist``, ``pre_dist``, ``pull_force``, ``push_force``.
@@ -42,51 +40,44 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import methods as _methods
 from repro.core import pullpush as pp
+from repro.core.methods import get_method
 
-METHODS = ("simple_avg", "hard", "easgd", "lsgd", "mgrawa", "ddp")
+# canonical methods with a tree reference path (parity-test surface);
+# lpf_sgd is flat-engine-only and excluded by construction
+METHODS = _methods.tree_method_names()
 
-EASGD_BETA = 0.9  # elastic-center step (paper §7.1 baseline setting)
+EASGD_BETA = _methods.EASGD_BETA   # re-export (pre-registry callers)
 
 
 def init_state(method, stacked, *, engine=None):
     """Per-method consensus state. With a flat engine, row-shaped state
-    (easgd's center) lives in the flat buffer's aux rows instead."""
+    (easgd/parle centers) lives in the flat buffer's aux rows instead;
+    LPF-SGD's filtered gradient is a worker-shaped EMA buffer that rides
+    in ``TrainState.cstate`` either way."""
+    spec = get_method(method)
     if engine is not None:
+        if spec.filter_mu:
+            L = engine.layout
+            return {"g_ema": jnp.zeros((L.M, L.n), jnp.float32)}
         return {}
-    if method == "easgd":
+    if spec.center_beta:
         return {"center": pp.tree_mean0(stacked)}
     return {}
 
 
 def consensus_target(method, stacked, state, *, losses=None, grad_norms=None,
-                     easgd_beta=EASGD_BETA):
-    """Returns (x_C tree [no worker dim] or stacked, new_state, leader_idx)."""
-    if method in ("simple_avg", "hard"):
-        return pp.tree_mean0(stacked), state, None
-    if method == "easgd":
-        z = state["center"]
-        xa = pp.tree_mean0(stacked)
-        z_new = jax.tree.map(
-            lambda zc, a: zc + easgd_beta * (a - zc), z, xa)
-        return z_new, {"center": z_new}, None
-    if method == "lsgd":
-        if losses is None:
-            # ValueError, not assert: user-facing path, must survive -O
-            raise ValueError("lsgd needs per-worker losses")
-        idx = jnp.argmin(losses)
-        leader = jax.tree.map(lambda a: a.astype(jnp.float32)[idx], stacked)
-        return leader, state, idx
-    if method == "mgrawa":
-        if grad_norms is None:
-            raise ValueError("mgrawa needs per-worker grad norms")
-        w = 1.0 / jnp.maximum(grad_norms, 1e-12)
-        w = w / jnp.sum(w)
-        target = jax.tree.map(
-            lambda a: jnp.tensordot(w, a.astype(jnp.float32), axes=(0, 0)),
-            stacked)
-        return target, state, None
-    raise ValueError(method)
+                     easgd_beta=None):
+    """Returns (x_C tree [no worker dim] or stacked, new_state, leader_idx).
+    ``easgd_beta`` overrides the spec's center step (legacy knob)."""
+    spec = get_method(method)
+    if spec.tree_target is None:
+        raise ValueError(method)
+    if easgd_beta is not None and easgd_beta != spec.center_beta:
+        spec = dataclasses.replace(spec, center_beta=easgd_beta)
+    return spec.tree_target(spec, stacked, state, losses=losses,
+                            grad_norms=grad_norms)
 
 
 def _metrics(consensus_dist, pre_dist, pull_force, push_force):
@@ -99,8 +90,20 @@ def _metrics(consensus_dist, pre_dist, pull_force, push_force):
     }
 
 
+def _pull_coef(spec, dcfg, lam_t, pull_scale):
+    """The effective pull coefficient: alpha, hard-pulled to 1, ramped by
+    the replica-coupling schedule (Parle: lam_t / lam), and scaled by the
+    clock's inner/outer plan (Entropy-SGD sub-rounds). Exact alpha for
+    every spec without ramp/scale (x * 1.0 is IEEE-exact)."""
+    pull = 1.0 if spec.hard_pull else dcfg.alpha
+    if spec.pull_ramp and dcfg.lam > 0:
+        pull = pull * (lam_t / dcfg.lam)
+    return pull * pull_scale
+
+
 def apply_round(params, dcfg, lam_t, state, *, losses=None, grad_norms=None,
-                push_from="average", engine=None, first_gram=None, mask=None):
+                push_from="average", engine=None, first_gram=None, mask=None,
+                push_vec=None, pull_scale=1.0):
     """One communication round. Returns (params, state, metrics).
 
     ``params`` is a worker-stacked pytree (tree path) or the engine's flat
@@ -113,18 +116,26 @@ def apply_round(params, dcfg, lam_t, state, *, losses=None, grad_norms=None,
     worker rows drop out of every target-weight combination AND have their
     pull/push coefficients zeroed, so their rows pass through the mixing
     bit-exactly unchanged (DESIGN.md §Overlap, elastic membership).
+    ``push_vec`` (flat path only) is the per-worker push direction field
+    ``(M, n[_local])`` for specs with ``push_source="filtered_grad"``
+    (LPF-SGD's EMA gradient). ``pull_scale`` scales the pull coefficient
+    (the RoundClock's inner/outer plan; 1.0 = exact no-op).
     """
     if engine is not None:
         return _apply_round_flat(engine, params, dcfg, lam_t, state,
                                  losses=losses, grad_norms=grad_norms,
                                  push_from=push_from, first_gram=first_gram,
-                                 mask=mask)
+                                 mask=mask, push_vec=push_vec,
+                                 pull_scale=pull_scale)
     if first_gram is not None:
         raise ValueError("first_gram requires the flat engine")
     if mask is not None:
         raise ValueError("elastic mask requires the flat engine")
+    if push_vec is not None:
+        raise ValueError("push_vec requires the flat engine")
     return _apply_round_tree(params, dcfg, lam_t, state, losses=losses,
-                             grad_norms=grad_norms, push_from=push_from)
+                             grad_norms=grad_norms, push_from=push_from,
+                             pull_scale=pull_scale)
 
 
 # ---------------------------------------------------------------------------
@@ -132,26 +143,27 @@ def apply_round(params, dcfg, lam_t, state, *, losses=None, grad_norms=None,
 # ---------------------------------------------------------------------------
 
 def _apply_round_tree(stacked, dcfg, lam_t, state, *, losses, grad_norms,
-                      push_from):
-    method = dcfg.consensus
-    alpha = 1.0 if method == "hard" else dcfg.alpha
+                      push_from, pull_scale=1.0):
+    spec = get_method(dcfg.consensus)
+    pull = _pull_coef(spec, dcfg, lam_t, pull_scale)
+    push = dcfg.push and spec.pushes
 
-    if method == "ddp":
+    if not spec.communicates:               # ddp: metrics only
         r = pp.worker_dists(stacked).mean()
         return stacked, state, _metrics(r, r, 0.0, 0.0)
 
-    if method == "simple_avg" and dcfg.push and not dcfg.exact_second_term \
+    if spec.fuse_eq5 and push and not dcfg.exact_second_term \
             and push_from == "average":
-        new, metrics = pp.pullpush(stacked, alpha, lam_t, dcfg.eps)
+        new, metrics = pp.pullpush(stacked, pull, lam_t, dcfg.eps)
         return new, state, _metrics(**{k: metrics[k] for k in (
             "consensus_dist", "pre_dist", "pull_force", "push_force")})
 
     target, state, leader_idx = consensus_target(
-        method, stacked, state, losses=losses, grad_norms=grad_norms)
+        dcfg.consensus, stacked, state, losses=losses, grad_norms=grad_norms)
     pre = jnp.mean(pp.worker_dists(stacked))
-    new = pp.pull_only(stacked, target, alpha)
+    new = pp.pull_only(stacked, target, pull)
 
-    if dcfg.push:
+    if push:
         if dcfg.exact_second_term:
             new = pp.exact_push(new, lam_t * pp.worker_dists(new).shape[0],
                                 dcfg.eps)
@@ -162,37 +174,52 @@ def _apply_round_tree(stacked, dcfg, lam_t, state, *, losses, grad_norms,
         else:
             new = pp.push_only(new, lam_t, eps=dcfg.eps)
     post = jnp.mean(pp.worker_dists(new))
-    return new, state, _metrics(post, pre, alpha * pre,
-                                lam_t if dcfg.push else 0.0)
+    return new, state, _metrics(post, pre, pull * pre,
+                                lam_t if push else 0.0)
 
 
 # ---------------------------------------------------------------------------
-# Flat path: thin method -> (target-weights, c0, c1) lowering over the engine
+# Flat path: generic MethodSpec -> (target-weights, c0, c1) stage lowering
 # ---------------------------------------------------------------------------
 
 def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
-                 push_from="average", mask=None):
-    """Lower a consensus method to its flat-engine stage list.
+                 push_from="average", mask=None, pull_scale=1.0):
+    """Lower a consensus method's ``MethodSpec`` to its flat-engine stages.
 
-    Returns ``(stages, alpha)`` with each stage ``("coef", T, c0, c1)`` (a
-    fused target-weight + coefficient mixing stage) or ``("exact", lam_r)``
-    (the Appendix E.1 two-term push). An empty list means ddp (metrics
-    only). Public so the double-buffered trainer can read stage 1's target
-    weights BEFORE the scan — the mid-scan ``stage_comm`` chunks need T1 —
-    and then execute the identical list via ``apply_round(...,
-    first_gram=...)`` (the lowering is a pure function of its inputs, so
-    lowering twice is free trace-time work).
+    Returns ``(stages, pull)`` with each stage ``("coef", T, c0, c1)`` (a
+    fused target-weight + coefficient mixing stage), ``("exact", lam_r)``
+    (the Appendix E.1 two-term push) or ``("vec", cvec)`` (push along the
+    external direction field — LPF-SGD's filtered gradient, executed by
+    ``engine.vec_stage``). An empty list means no consensus stage (ddp,
+    metrics only); ``pull`` is the effective pull coefficient (the
+    ``pull_force`` metric). Public so the double-buffered trainer can read
+    stage 1's target weights BEFORE the scan — the mid-scan ``stage_comm``
+    chunks need T1 — and then execute the identical list via
+    ``apply_round(..., first_gram=...)`` (the lowering is a pure function
+    of its inputs, so lowering twice is free trace-time work).
+
+    The per-method semantics all come from the spec:
+
+    * ``spec.weight_fn(ctx)`` produces the row-stochastic worker
+      combination w (mask semantics INSIDE the rule — the ctx carries the
+      active mask and the pre-masked uniform);
+    * ``spec.center_beta`` turns w into the elastic-center target
+      ``beta * w + (1 - beta) * e_center`` with the aux row adopting it at
+      ``spec.aux_pull`` (EASGD/Parle: center update and worker pull are
+      ONE mixing stage);
+    * ``spec.fuse_eq5`` fuses pull+push into one Eq. 5 stage;
+    * the push stage targets the spec's leader, the Appendix E.1 exact
+      form, the filtered-gradient field, or the uniform mean.
 
     ``mask`` is the elastic participation vector ``(M,)`` (1 = active):
     the row-stochastic target weights renormalize over ACTIVE rows only
-    (uniform and mgrawa weights re-sum to one, lsgd's argmin skips
-    inactive losses, easgd's center pulls toward the active mean) and
-    every coefficient vector's inactive worker entries are zeroed, so an
-    inactive row neither contributes to nor receives the consensus — its
-    flat-view row passes through each mixing stage bit-exactly.
+    and every coefficient vector's inactive worker entries are zeroed, so
+    an inactive row neither contributes to nor receives the consensus —
+    its flat-view row passes through each mixing stage bit-exactly.
     """
-    method = dcfg.consensus
-    alpha = 1.0 if method == "hard" else dcfg.alpha
+    spec = get_method(dcfg.consensus)
+    pull = _pull_coef(spec, dcfg, lam_t, pull_scale)
+    push = dcfg.push and spec.pushes
     L = engine.layout
     M, R = L.M, L.R
     eye = jnp.eye(R, dtype=jnp.float32)
@@ -205,7 +232,7 @@ def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
         # masked uniform: the worker mean over active rows only
         u = mfull / jnp.maximum(jnp.sum(mfull), 1.0)
         # coefficient gate: inactive worker rows get zero pull/push; aux
-        # rows always participate (easgd's center keeps tracking)
+        # rows always participate (the elastic center keeps tracking)
         gate = jnp.ones((R,), jnp.float32).at[:M].set(act)
 
     def worker_T(w):
@@ -215,53 +242,42 @@ def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
             T = jnp.concatenate([T[:M], eye[M:]], axis=0)
         return T
 
-    # ---- method -> stage list ---------------------------------------------
-    stages = []      # ("coef", T, c0, c1) | ("exact", lam_r)
-    leader_w = None
-    if method != "ddp":
-        c_pull = zeros.at[:M].set(alpha)
-        if method == "simple_avg" and dcfg.push and not dcfg.exact_second_term \
+    # ---- spec -> stage list -----------------------------------------------
+    stages = []      # ("coef", T, c0, c1) | ("exact", lam_r) | ("vec", cvec)
+    if spec.communicates:
+        if spec.needs_losses and losses is None:
+            # ValueError, not assert: user-facing path, must survive -O
+            raise ValueError(f"{spec.name} needs per-worker losses")
+        if spec.needs_grad_norms and grad_norms is None:
+            raise ValueError(f"{spec.name} needs grad norms")
+        w = spec.weight_fn(_methods.WeightCtx(
+            M=M, R=R, eye=eye, u=u, zeros=zeros, act=act, losses=losses,
+            grad_norms=grad_norms))
+        c_pull = zeros.at[:M].set(pull)
+        if spec.fuse_eq5 and push and not dcfg.exact_second_term \
                 and push_from == "average":
             # Eq. 5: pull and push share the x_A target -> ONE fused stage
-            stages.append(("coef", worker_T(u), c_pull,
+            stages.append(("coef", worker_T(w), c_pull,
                            zeros.at[:M].set(-lam_t)))
         else:
-            if method in ("simple_avg", "hard"):
-                T1 = worker_T(u)
-            elif method == "easgd":
-                # every row targets z_new = (1-beta) z + beta x_A; the aux
-                # row adopts it exactly (coef 1) — the center update and the
+            if spec.center_beta:
+                # every row targets z' = beta (w.x) + (1-beta) z; the aux
+                # row adopts it at aux_pull — the center update and the
                 # worker pull are ONE mixing stage
-                w_z = EASGD_BETA * u + (1.0 - EASGD_BETA) * eye[M]
+                w_z = spec.center_beta * w \
+                    + (1.0 - spec.center_beta) * eye[M]
                 T1 = jnp.broadcast_to(w_z, (R, R))
-                c_pull = c_pull.at[M:].set(1.0)
-            elif method == "lsgd":
-                if losses is None:
-                    raise ValueError("lsgd needs per-worker losses")
-                lsgd_losses = losses
-                if act is not None:
-                    # inactive rows can't lead: their (frozen-iterate)
-                    # losses are masked out of the argmin
-                    lsgd_losses = jnp.where(act > 0, losses, jnp.inf)
-                leader_w = jax.nn.one_hot(jnp.argmin(lsgd_losses), R,
-                                          dtype=jnp.float32)
-                T1 = worker_T(leader_w)
-            elif method == "mgrawa":
-                if grad_norms is None:
-                    raise ValueError("mgrawa needs grad norms")
-                w = 1.0 / jnp.maximum(grad_norms, 1e-12)
-                if act is not None:
-                    w = w * act
-                w = w / jnp.maximum(jnp.sum(w), 1e-12)
-                T1 = worker_T(zeros.at[:M].set(w))
+                c_pull = c_pull.at[M:].set(spec.aux_pull)
             else:
-                raise ValueError(method)
+                T1 = worker_T(w)
             stages.append(("coef", T1, c_pull, zeros))
-            if dcfg.push:
-                if dcfg.exact_second_term:
+            if push:
+                if spec.push_source == "filtered_grad":
+                    stages.append(("vec", zeros.at[:M].set(-lam_t)))
+                elif dcfg.exact_second_term:
                     stages.append(("exact", lam_t * M))
-                elif push_from == "leader" and leader_w is not None:
-                    stages.append(("coef", worker_T(leader_w), zeros,
+                elif push_from == "leader" and spec.leader:
+                    stages.append(("coef", worker_T(w), zeros,
                                    zeros.at[:M].set(-lam_t)))
                 else:
                     stages.append(("coef", worker_T(u), zeros,
@@ -270,22 +286,33 @@ def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
         if any(s[0] == "exact" for s in stages):
             raise ValueError("elastic mask does not support "
                              "exact_second_term stages")
-        stages = [("coef", T, c0 * gate, c1 * gate)
-                  for (_, T, c0, c1) in stages]
-    return stages, alpha
+        gated = []
+        for s in stages:
+            if s[0] == "coef":
+                _, T, c0, c1 = s
+                gated.append(("coef", T, c0 * gate, c1 * gate))
+            else:                            # ("vec", cvec)
+                gated.append(("vec", s[1] * gate))
+        stages = gated
+    return stages, pull
 
 
 def _apply_round_flat(engine, flat, dcfg, lam_t, state, *, losses, grad_norms,
-                      push_from, first_gram=None, mask=None):
+                      push_from, first_gram=None, mask=None, push_vec=None,
+                      pull_scale=1.0):
+    spec = get_method(dcfg.consensus)
     if engine.eps != dcfg.eps:
         # the engine's norm guard must match the config's (tree-path parity)
         engine = dataclasses.replace(engine, eps=dcfg.eps)
-    stages, alpha = lower_stages(engine, dcfg, lam_t, losses=losses,
-                                 grad_norms=grad_norms, push_from=push_from,
-                                 mask=mask)
+    stages, pull = lower_stages(engine, dcfg, lam_t, losses=losses,
+                                grad_norms=grad_norms, push_from=push_from,
+                                mask=mask, pull_scale=pull_scale)
     if first_gram is not None and (not stages or stages[0][0] != "coef"):
         raise ValueError("first_gram requires a leading coefficient stage "
-                         "(every non-ddp lowering has one)")
+                         "(every communicating lowering has one)")
+    if any(s[0] == "vec" for s in stages) and push_vec is None:
+        raise ValueError(f"{spec.name} needs push_vec (the filtered-"
+                         f"gradient field) on the flat path")
 
     # ---- execute stages; each returns its own exact pre/post metrics ------
     # only stage 1's contraction can be precomputed: later stages contract
@@ -296,15 +323,19 @@ def _apply_round_flat(engine, flat, dcfg, lam_t, state, *, losses, grad_norms,
             _, T, c0, c1 = stage
             flat, _, s_pre, s_post = engine.stage(
                 flat, T, c0, c1, gram=first_gram if i == 0 else None)
+        elif stage[0] == "vec":
+            _, cvec = stage
+            flat, _, s_pre, s_post = engine.vec_stage(flat, push_vec, cvec)
         else:
             _, lam_r = stage
             flat, _, s_pre, s_post = engine.exact_stage(flat, lam_r)
         pre = s_pre if pre is None else pre
         post = s_post
 
-    if post is None:                                  # ddp: metrics only
+    if post is None:                        # no consensus stage: metrics only
         pre = jnp.mean(engine.dists_to_mean(flat))
         return flat, state, _metrics(pre, pre, 0.0, 0.0)
 
+    push = dcfg.push and spec.pushes
     return flat, state, _metrics(
-        post, pre, alpha * pre, lam_t if dcfg.push else 0.0)
+        post, pre, pull * pre, lam_t if push else 0.0)

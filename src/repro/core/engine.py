@@ -18,15 +18,22 @@ This engine keeps ONE persistent flat view for the whole training run:
   ``x <- W @ x`` with ``W = I + diag(coef) (T - I)`` for a row-stochastic
   target-weight matrix ``T`` and ``coef = c0 + c1 / max(r, eps)``:
 
-    method      target weights T (worker rows)     c0      c1
-    ----------  ---------------------------------  ------  ------
-    simple_avg  uniform 1/M                        alpha   -lam   (Eq. 5, fused)
-    hard        uniform 1/M                        1       0
-    easgd       beta*u + (1-beta)*e_z  (z = aux)   alpha   0      (+push stage)
-    lsgd        one_hot(argmin losses)             alpha   0      (+push stage)
-    mgrawa      w_m ∝ 1/||grad_m||                 alpha   0      (+push stage)
-    push stage  uniform 1/M (or leader)            0       -lam
+    method      target weights T (worker rows)     c0       c1
+    ----------  ---------------------------------  -------  ------
+    simple_avg  uniform 1/M                        alpha    -lam   (Eq. 5, fused)
+    hard        uniform 1/M                        1        0
+    easgd       beta*u + (1-beta)*e_z  (z = aux)   alpha    0      (+push stage)
+    parle       like easgd; pull ramps with lam_t  alpha*s  0      (no push)
+    lsgd        one_hot(argmin losses)             alpha    0      (+push stage)
+    mgrawa      w_m ∝ 1/||grad_m||                 alpha    0      (+push stage)
+    lpf_sgd     uniform 1/M                        alpha    0      (+vec stage)
+    entropy_sgd uniform 1/M (inner/outer plan)     alpha*s  0      (no push)
+    push stage  uniform 1/M (or leader)            0        -lam
+    vec stage   external field (filtered grad)     0        -lam   (vec_stage)
     ddp         (identity; metrics only)
+
+  The per-method table rows are registry entries (`repro.core.methods`);
+  the engine itself only ever sees generic stages.
 
 * All distances are zero-sum quadratic forms of the Gram matrix
   ``G = X X^T``: ``||x_i - T_i x||^2 = v^T G v`` with ``v = e_i - T_i``,
@@ -145,7 +152,8 @@ class ConsensusEngine:
         for s in sizes:
             offsets.append(o)
             o += s
-        aux = 1 if method == "easgd" else 0
+        from repro.core.methods import get_method
+        aux = get_method(method).aux_rows
         # the fused kernel is TPU-targeted: compile it there, interpret it
         # when explicitly requested elsewhere (tests); CPU/GPU default to
         # the jnp Gram+GEMM path
@@ -162,7 +170,7 @@ class ConsensusEngine:
 
     def flatten(self, stacked):
         """Stacked pytree -> (R, n) fp32. Aux rows are initialized here
-        (easgd: elastic center = worker mean)."""
+        (easgd/parle: elastic center = worker mean)."""
         leaves = jax.tree_util.tree_leaves(stacked)
         M = self.layout.M
         flat = jnp.concatenate(
@@ -387,6 +395,29 @@ class ConsensusEngine:
         V_post = (-jnp.diag(1.0 + (lam_r / M) * iv)
                   + (lam_r / M) * jnp.broadcast_to(u * iv, (R, R)))
         post = jnp.mean(jnp.sqrt(self.sq_forms(Gg, V_post)[:M]))
+        return new, r, pre, post
+
+    def vec_stage(self, flat, vec, cvec):
+        """Push along an EXTERNAL per-worker direction field (LPF-SGD's
+        EMA-filtered gradient): row m moves by
+        ``(cvec_m / max(r_m, eps)) * vec_m`` with ``r_m = ||vec_m||`` —
+        the same normalized-force form as the Eq. 5 push, but the
+        direction comes from ``vec`` (shape ``(M, n[_local])``), not from
+        the gap to the mean. ``cvec`` is the full ``(R,)`` coefficient
+        vector (aux entries 0; the elastic gate zeroes inactive workers,
+        whose frozen rows also have a zero delta).
+        Returns ``(new_flat, r, pre_dist, post_dist)`` like ``stage``.
+        Sharded: the norm's column contraction psums over the column
+        axes; the update itself is column-local.
+        """
+        M = self.layout.M
+        v = vec.astype(jnp.float32)
+        r = jnp.sqrt(jnp.maximum(
+            self._colsum(jnp.sum(jnp.square(v), axis=1)), 0.0))
+        upd = (cvec[:M] / jnp.maximum(r, self.eps))[:, None] * v
+        pre = jnp.mean(self.dists_to_mean(flat))
+        new = flat.at[:M].add(upd) if self.layout.aux else flat + upd
+        post = jnp.mean(self.dists_to_mean(new))
         return new, r, pre, post
 
     def dists_to_mean(self, flat):

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.checkpoint import load_train_state, save_pytree, save_train_state
 from repro.configs import ARCHS, DPPFConfig, get_arch, reduced
+from repro.core import methods as method_registry
 from repro.data import TokenTask, make_lm_batch, make_round_batch
 from repro.models import build_model
 from repro.optim import make_optimizer
@@ -41,11 +42,26 @@ def main(argv=None):
     ap.add_argument("--tau", type=int, default=4)
     ap.add_argument("--alpha", type=float, default=0.1)
     ap.add_argument("--lam", type=float, default=0.5)
-    ap.add_argument("--consensus", default="simple_avg")
+    # method choices and help come from the registry (core.methods): one
+    # line per registered MethodSpec, aliases included in the choices
+    method_help = "; ".join(
+        f"{s.name} = {s.doc}"
+        for s in (method_registry.get_method(n)
+                  for n in method_registry.method_names(aliases=False)))
+    flat_only = ", ".join(
+        n for n in method_registry.method_names(aliases=False)
+        if method_registry.get_method(n).requires_flat)
+    ap.add_argument("--method", "--consensus", dest="consensus",
+                    default="simple_avg",
+                    choices=method_registry.method_names(),
+                    help="consensus method (registry core.methods): "
+                         + method_help)
     ap.add_argument("--engine", default="flat", choices=["tree", "flat"],
                     help="consensus execution engine (flat = persistent "
                          "(R, n) view — worker rows plus aux consensus-"
-                         "state rows — with fused Gram/mixing round update)")
+                         "state rows — with fused Gram/mixing round "
+                         "update). Registry methods marked flat-only "
+                         f"({flat_only}) refuse engine=tree")
     ap.add_argument("--overlap", default="none",
                     choices=["none", "staleness1", "doublebuf",
                              "staleness_k"],
@@ -120,6 +136,10 @@ def main(argv=None):
                          "staleness, plus the clock position) per round to "
                          "PATH (train.clock.RoundMetricsLogger; the ddp "
                          "branch logs per step on its tau=1 clock)")
+    ap.add_argument("--legacy-metrics", action="store_true",
+                    help="re-emit the deprecated boolean 'stale' field "
+                         "next to the integer 'staleness' in "
+                         "--log-every-round records")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="",
                     help="checkpoint path: final (serving) params are "
@@ -129,11 +149,12 @@ def main(argv=None):
                          "exists")
     ap.add_argument("--log-every", type=int, default=5)
     args = ap.parse_args(argv)
+    mspec = method_registry.get_method(args.consensus)
     if (args.sharded or args.mesh) and (args.engine != "flat"
-                                        or args.consensus == "ddp"):
-        ap.error("--sharded/--mesh require --engine flat and a non-ddp "
-                 "consensus (the shard_map round runs on the flat "
-                 "engine's (R, n) view)")
+                                        or not mspec.communicates):
+        ap.error("--sharded/--mesh require --engine flat and a "
+                 "communicating consensus method (the shard_map round "
+                 "runs on the flat engine's (R, n) view)")
     if args.sharded and args.mesh:
         ap.error("--sharded and --mesh are mutually exclusive (--mesh IS "
                  "a sharded run on an explicit workers,fsdp,model shape)")
@@ -192,11 +213,12 @@ def main(argv=None):
     clock = RoundClock.from_config(dcfg, base_lr=args.lr,
                                    total_steps=args.steps,
                                    warmup=args.warmup)
-    logger = RoundMetricsLogger(args.log_every_round) \
+    logger = RoundMetricsLogger(args.log_every_round,
+                                legacy=args.legacy_metrics) \
         if args.log_every_round else None
 
     t0 = time.time()
-    if args.consensus == "ddp":
+    if not mspec.communicates:
         p0 = model.init(key)
         state = TrainState(params=p0, opt=opt.init(p0), cstate={},
                            t=jnp.zeros((), jnp.int32))

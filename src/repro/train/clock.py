@@ -56,6 +56,11 @@ class RoundSpec:
     start: int      # GLOBAL step of the round's first local step
     tau: int        # local steps this round (>= 1; the last round may be
                     # shorter — the remainder is run, never dropped)
+    # inner/outer plan (Entropy-SGD): "inner" sub-rounds apply the weak
+    # ``inner_pull``-scaled pull (local-entropy exploration), the final
+    # "outer" piece of each base round applies the full pull. Plans
+    # without an inner loop are all-"outer".
+    scope: str = "outer"
 
     @property
     def stop(self) -> int:
@@ -101,6 +106,13 @@ class RoundClock:
     # pipeline depth k of overlap="staleness_k" (ignored by the other
     # modes, whose depth is fixed at 1)
     staleness: int = 1
+    # inner/outer plan (Entropy-SGD, from the MethodSpec registry):
+    # inner_rounds > 1 splits every base round into that many sub-rounds;
+    # the non-final pieces are "inner" and scale the pull coefficient by
+    # inner_pull (``pull_scale_at``), the final piece is the full-pull
+    # "outer" round. 0/1 = no inner loop (every round "outer").
+    inner_rounds: int = 0
+    inner_pull: float = 1.0
 
     def __post_init__(self):
         # ValueError, not assert: these guard user-facing config plumbing
@@ -125,6 +137,12 @@ class RoundClock:
             raise ValueError(f"warmup must be >= 0, got {self.warmup}")
         if self.staleness < 1:
             raise ValueError(f"staleness must be >= 1, got {self.staleness}")
+        if self.inner_rounds < 0:
+            raise ValueError(f"inner_rounds must be >= 0, got "
+                             f"{self.inner_rounds}")
+        if not 0.0 < self.inner_pull <= 1.0:
+            raise ValueError(f"inner_pull must be in (0, 1], got "
+                             f"{self.inner_pull}")
         if self.overlap == "staleness_k" and self.warmup > 0 and \
                 math.ceil(self.warmup / self.tau) < self.staleness:
             # the first k rounds are exact-consensus pipeline fill; a
@@ -147,11 +165,17 @@ class RoundClock:
         tau_schedule = getattr(dcfg, "tau_schedule", "fixed")
         if tau_schedule == "fixed" and dcfg.qsr_beta > 0:
             tau_schedule = "qsr"
+        # the method registry owns the inner/outer plan (Entropy-SGD's
+        # local-entropy loop is clock structure, not trainer code)
+        from repro.core.methods import get_method
+        spec = get_method(getattr(dcfg, "consensus", "simple_avg"))
         return cls(total_steps=total_steps, tau=dcfg.tau, base_lr=base_lr,
                    warmup=warmup, lam=dcfg.lam, lam_kind=dcfg.lam_schedule,
                    tau_schedule=tau_schedule, qsr_beta=dcfg.qsr_beta,
                    overlap=getattr(dcfg, "overlap", "none"),
-                   staleness=getattr(dcfg, "staleness", 1))
+                   staleness=getattr(dcfg, "staleness", 1),
+                   inner_rounds=spec.inner_rounds,
+                   inner_pull=spec.inner_pull)
 
     @property
     def staleness_depth(self) -> int:
@@ -200,9 +224,25 @@ class RoundClock:
             else:
                 tau_t = self.tau
             tau_t = min(tau_t, self.total_steps - t)   # never drop remainder
-            rounds.append(RoundSpec(index=len(rounds), start=t, tau=tau_t))
-            t += tau_t
+            for piece, scope in self._split_inner(tau_t):
+                rounds.append(RoundSpec(index=len(rounds), start=t,
+                                        tau=piece, scope=scope))
+                t += piece
         return tuple(rounds)
+
+    def _split_inner(self, tau_t: int):
+        """Split one base round's tau into the inner/outer sub-round plan:
+        ``inner_rounds`` near-equal pieces, all but the last "inner" (weak
+        pull). A tau too short to split keeps fewer (non-empty) pieces; no
+        inner loop -> the single "outer" round."""
+        k = self.inner_rounds
+        if k <= 1 or tau_t <= 1:
+            return [(tau_t, "outer")]
+        k = min(k, tau_t)
+        base, rem = divmod(tau_t, k)
+        pieces = [base + 1] * rem + [base] * (k - rem)
+        return [(p, "inner" if i < len(pieces) - 1 else "outer")
+                for i, p in enumerate(pieces)]
 
     @property
     def total_rounds(self) -> int:
@@ -248,6 +288,22 @@ class RoundClock:
         """Cosine LR at global step ``t`` (traced ok)."""
         return cosine_lr(self.base_lr, t, self.total_steps, self.warmup)
 
+    def pull_scale_at(self, round_idx):
+        """Pull-coefficient scale of round ``round_idx`` from the
+        inner/outer plan: ``inner_pull`` on "inner" sub-rounds, 1.0 on
+        "outer" rounds. Plans without an inner loop return the python
+        float 1.0 (an IEEE-exact no-op for every caller — the round
+        builders multiply it in unconditionally). Accepts a traced scalar
+        (jnp.take over the host-side plan)."""
+        if self.inner_rounds <= 1:
+            return 1.0
+        import jax.numpy as jnp
+        scales = jnp.asarray(
+            tuple(self.inner_pull if r.scope == "inner" else 1.0
+                  for r in self.rounds), jnp.float32)
+        return jnp.take(scales, jnp.clip(round_idx, 0,
+                                         self.total_rounds - 1))
+
     def _host_lam(self, round_idx: int) -> float:
         """Pure-python twin of ``lam_at`` for the host-side plan report."""
         T = max(self.total_rounds - 1, 1)
@@ -282,9 +338,10 @@ class RoundClock:
         plan)."""
         taus = self.taus()
         depth = self.staleness_depth
+        inner = self.inner_rounds > 1
         plan = []
         for spec in self.rounds:
-            plan.append({
+            row = {
                 "round": spec.index,
                 "start": spec.start,
                 "tau": spec.tau,
@@ -300,8 +357,13 @@ class RoundClock:
                 # rounds 0..depth-1 are exact fill (0), later rounds apply
                 # the round-(r-depth) snapshot (depth)
                 "staleness": depth if spec.index >= depth else 0,
-            })
-        return {
+            }
+            if inner:
+                # conditional key: plans without an inner loop keep the
+                # exact legacy row schema (committed BENCH baselines)
+                row["scope"] = spec.scope
+            plan.append(row)
+        out = {
             "total_steps": self.total_steps,
             "tau_base": self.tau,
             "tau_schedule": self.tau_schedule,
@@ -317,6 +379,10 @@ class RoundClock:
             "tau_max": max(taus),
             "plan": plan,
         }
+        if inner:
+            out["inner_rounds"] = self.inner_rounds
+            out["inner_pull"] = self.inner_pull
+        return out
 
     def plan_table(self, max_rows: int = 12) -> str:
         """The round plan as a markdown table (the dry-run report prints
@@ -332,6 +398,9 @@ class RoundClock:
             extra += f", overlap {d['overlap']} (k={d['staleness']})"
             if d["tau_schedule"] == "qsr":
                 extra += " (stale-LR QSR)"
+        if d.get("inner_rounds"):
+            extra += (f", inner/outer plan x{d['inner_rounds']} "
+                      f"(inner pull {d['inner_pull']})")
         head = [f"round plan: {d['rounds']} rounds over "
                 f"{d['total_steps']} steps (tau_schedule="
                 f"{d['tau_schedule']}, tau {d['tau_min']}..{d['tau_max']}, "
@@ -349,6 +418,8 @@ class RoundClock:
                 head.append("| ... | | | | | |")
                 continue
             tau_cell = f"{r['tau']} (warm)" if r["warmup"] else f"{r['tau']}"
+            if r.get("scope") == "inner":
+                tau_cell += " (inner)"
             head.append(f"| {r['round']} | {r['start']} | {tau_cell} | "
                         f"{r['lam']:.4f} | {r['lr_start']:.4f} -> "
                         f"{r['lr_end']:.4f} | {r['staleness']} |")
@@ -372,11 +443,16 @@ class RoundMetricsLogger:
     metrics, so a QSR-adaptive run's log is self-describing. Values are
     converted via ``float`` — call it OUTSIDE jit (on the returned
     metrics), never inside a traced function.
-    ``launch/train.py --log-every-round PATH`` wires it.
+    ``launch/train.py --log-every-round PATH`` wires it
+    (``--legacy-metrics`` for the PR 7 compat ``stale`` boolean).
     """
 
-    def __init__(self, path: str):
+    def __init__(self, path: str, *, legacy: bool = False):
         self.path = path
+        # legacy=True re-emits the pre-staleness_k boolean ``stale`` key
+        # NEXT TO the integer ``staleness`` (old downstream parsers); the
+        # default emits only ``staleness`` — no double key
+        self.legacy = legacy
         d = os.path.dirname(os.path.abspath(path))
         os.makedirs(d, exist_ok=True)
         self._fh = open(path, "w")
@@ -387,14 +463,19 @@ class RoundMetricsLogger:
         else:   # ddp / per-step drivers: a bare global step index
             row = {"round": int(spec), "start": int(spec), "tau": 1}
         for k, v in metrics.items():
-            # legacy schema: the boolean ``stale`` flag's 0/1 parses
-            # directly as the integer staleness depth
-            if k == "stale" and "staleness" not in metrics:
+            if k == "stale":
+                if "staleness" in metrics:
+                    # modern emitters carry the integer depth; drop the
+                    # duplicate boolean instead of double-emitting it
+                    continue
+                # legacy emitters: the boolean flag's 0/1 IS the depth
                 k = "staleness"
             try:
                 row[k] = float(v)
             except (TypeError, ValueError):
                 row[k] = str(v)
+        if self.legacy and "staleness" in row:
+            row["stale"] = bool(row["staleness"] > 0)
         self._fh.write(json.dumps(row) + "\n")
         self._fh.flush()
         return row

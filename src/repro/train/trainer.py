@@ -65,6 +65,7 @@ import jax.numpy as jnp
 from repro.configs.base import DPPFConfig
 from repro.core import consensus
 from repro.core.engine import ConsensusEngine, ShardedLayout
+from repro.core.methods import get_method
 from repro.optim import Optimizer, sam_gradient
 from repro.train.clock import RoundClock
 
@@ -181,7 +182,7 @@ def init_train_state(loss_params_init, opt: Optimizer, dcfg: DPPFConfig,
         keys = jax.random.split(key, n_workers)
         params = jax.vmap(loss_params_init)(keys)
     if engine is None and getattr(dcfg, "engine", "tree") == "flat" \
-            and dcfg.consensus != "ddp":
+            and get_method(dcfg.consensus).communicates:
         engine = ConsensusEngine.from_stacked(
             params, method=dcfg.consensus, eps=dcfg.eps)
     snap = None
@@ -277,6 +278,8 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                               "make_round_step")
     overlap_mode = getattr(dcfg, "overlap", "none")
     overlap = overlap_mode != "none"
+    spec = get_method(dcfg.consensus)
+    lpf = spec.push_source == "filtered_grad"
 
     def round_step(state: TrainState, batch):
         engine = state.engine
@@ -303,7 +306,20 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         # off-by-one that skipped round 0 and shifted the whole trajectory)
         round_idx = _round_index(state, dcfg)
         lam_t = clock.lam_at(round_idx)
+        ps = clock.pull_scale_at(round_idx)
         staleness_depth = jnp.int32(0)
+
+        def lpf_update(params_now, cst):
+            # EMA-filtered local progress (LPF-SGD): the per-round
+            # parameter delta is the accumulated gradient direction;
+            # filtering it gives the alternative push force. Frozen
+            # elastic rows contribute a zero delta (their scan reverted).
+            if not lpf:
+                return None, cst
+            g = spec.filter_mu * cst["g_ema"] \
+                + (1.0 - spec.filter_mu) * (p0 - engine.workers(params_now))
+            return g, {"g_ema": g}
+
         if overlap_mode == "staleness1":
             # staleness-1: consensus of the PREVIOUS round's snapshot; its
             # collectives have no data dependence on this round's scan, so
@@ -311,9 +327,11 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             # delta is applied to the fresh post-local-step view; the fresh
             # view becomes the next round's snapshot.
             snap = state.snap
+            push_vec, cstate_in = lpf_update(params, state.cstate)
             c_out, cstate, metrics = consensus.apply_round(
-                snap["x"], dcfg, lam_t, state.cstate,
-                losses=snap["losses"], grad_norms=snap["gns"], engine=engine)
+                snap["x"], dcfg, lam_t, cstate_in,
+                losses=snap["losses"], grad_norms=snap["gns"], engine=engine,
+                push_vec=push_vec, pull_scale=ps)
             new_snap = {"x": params, "losses": losses[-1], "gns": gns[-1]}
             # explicit round-0 pipeline bubble: the init snapshot is
             # (usually) collapsed, and consensus of a collapsed fleet is
@@ -332,10 +350,10 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             # a skipped round — the init snapshot is the collapsed fleet
             # and carries no information).
             snap = state.snap
-            cstate = state.cstate
+            push_vec, cstate = lpf_update(params, state.cstate)
             stages, _ = consensus.lower_stages(
                 engine, dcfg, lam_t, losses=snap["losses"],
-                grad_norms=snap["gns"])
+                grad_norms=snap["gns"], pull_scale=ps)
             T1 = stages[0][1]
             n_eff = max(1, min(dcfg.overlap_chunks, engine.layout.n))
             gram = None
@@ -348,13 +366,15 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             def _stale(_):
                 c_out, _, m = consensus.apply_round(
                     snap["x"], dcfg, lam_t, cstate, losses=snap["losses"],
-                    grad_norms=snap["gns"], engine=engine, first_gram=gram)
+                    grad_norms=snap["gns"], engine=engine, first_gram=gram,
+                    push_vec=push_vec, pull_scale=ps)
                 return q + (c_out - snap["x"]), m
 
             def _bubble(_):
                 new, _, m = consensus.apply_round(
                     q, dcfg, lam_t, cstate, losses=losses[-1],
-                    grad_norms=gns[-1], engine=engine)
+                    grad_norms=gns[-1], engine=engine,
+                    push_vec=push_vec, pull_scale=ps)
                 return new, m
 
             params, metrics = jax.lax.cond(state.t > 0, _stale, _bubble,
@@ -370,7 +390,6 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             # traced cond on the carried round index (resume-correct).
             k = dcfg.staleness
             snap = state.snap
-            cstate = state.cstate
             s_old = snap["x"][0]
             sl, sg = snap["losses"][0], snap["gns"][0]
             elastic = bool(getattr(dcfg, "elastic", False))
@@ -388,13 +407,16 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 opt_st = jax.tree.map(
                     lambda nw, ow: _row_select(eff, nw, ow),
                     opt_st, state.opt)
+            # filtered-grad update AFTER the elastic freeze: frozen rows'
+            # reverted scans contribute a zero delta to the EMA
+            push_vec, cstate = lpf_update(params, state.cstate)
             # the old slot's stage-1 contraction, chunked like doublebuf
             # (under shard_map the matching ring-gather + psum chunks
             # interleave with the scan — this is the single-shard
             # reference of the same recursion)
             stages, _ = consensus.lower_stages(
                 engine, dcfg, lam_t, losses=sl, grad_norms=sg,
-                mask=act_old)
+                mask=act_old, pull_scale=ps)
             T1 = stages[0][1]
             n_eff = max(1, min(dcfg.overlap_chunks, engine.layout.n))
             gram = None
@@ -406,13 +428,15 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             def _stale(_):
                 c_out, _, m = consensus.apply_round(
                     s_old, dcfg, lam_t, cstate, losses=sl, grad_norms=sg,
-                    engine=engine, first_gram=gram, mask=act_old)
+                    engine=engine, first_gram=gram, mask=act_old,
+                    push_vec=push_vec, pull_scale=ps)
                 return q + (c_out - s_old), m
 
             def _fill(_):
                 new, _, m = consensus.apply_round(
                     q, dcfg, lam_t, cstate, losses=losses[-1],
-                    grad_norms=gns[-1], engine=engine, mask=eff)
+                    grad_norms=gns[-1], engine=engine, mask=eff,
+                    push_vec=push_vec, pull_scale=ps)
                 return new, m
 
             params, metrics = jax.lax.cond(round_idx >= k, _stale, _fill,
@@ -451,9 +475,11 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             staleness_depth = jnp.where(round_idx >= k, k, 0) \
                 .astype(jnp.int32)
         else:
+            push_vec, cstate_in = lpf_update(params, state.cstate)
             params, cstate, metrics = consensus.apply_round(
-                params, dcfg, lam_t, state.cstate,
-                losses=losses[-1], grad_norms=gns[-1], engine=engine)
+                params, dcfg, lam_t, cstate_in,
+                losses=losses[-1], grad_norms=gns[-1], engine=engine,
+                push_vec=push_vec, pull_scale=ps)
             new_snap = state.snap
         metrics = dict(metrics)
         metrics["train_loss"] = losses.mean()
@@ -548,6 +574,8 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
     sk = overlap_mode == "staleness_k"
     k_depth = getattr(dcfg, "staleness", 1)
     elastic = sk and bool(getattr(dcfg, "elastic", False))
+    spec = get_method(dcfg.consensus)
+    lpf = spec.push_source == "filtered_grad"
     row_axes = tuple(plan.worker_axes)
     sizes = dict(mesh.shape)
     row_size = math.prod(sizes[a] for a in row_axes) if row_axes else 1
@@ -575,6 +603,25 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         s_engine = dataclasses.replace(engine, shard=ShardedLayout(
             row_axes=row_axes, col_axes=eff_cols, rows=row_size, cols=cols))
         row_e = _axis_entry(row_axes)
+
+        # GSPMD workaround (jax 0.4.37): when the specs leave mesh axes
+        # unmentioned (the replicated-columns fallback), a
+        # jnp.concatenate of shard_map outputs that is returned from jit
+        # alongside ANY other shard_map output comes back multiplied by
+        # the unmentioned-group size — the reshard of the concat SUMS
+        # the replicas instead of selecting one (metrics stay exact
+        # while params blow up 4x on a 2x2x2 mesh with cols=()).
+        # Pinning the concat fully replicated sidesteps the bad
+        # reshard; only the fallback case pays for it.
+        unmentioned = mesh.size // (row_size * cols)
+
+        def stitch(parts, axis=0):
+            out = jnp.concatenate(parts, axis=axis)
+            if unmentioned > 1:
+                from jax.sharding import NamedSharding
+                out = jax.lax.with_sharding_constraint(
+                    out, NamedSharding(mesh, P(*([None] * out.ndim))))
+            return out
         tau = jnp.shape(jax.tree.leaves(batch)[0])[0]
 
         def leading_dim_spec(leaf, entry, offset=0):
@@ -584,6 +631,10 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
 
         def mapped(w_loc, opt_loc, t0, rnd0, b_loc, *rest):
             rest = list(rest)
+            # the filtered-gradient EMA rides LAST in the operand list
+            # (rows replicated, columns sharded) — pop it from the end
+            # first so the positional front-pops below stay stable
+            g_ema = rest.pop() if lpf else None
             aux_loc = rest.pop(0) if aux else None
             snap_x = snap_aux = snap_l = snap_g = None
             act_ring = active = missed = None
@@ -608,6 +659,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             # clock position of the round about to mix (pre-scan index —
             # same off-by-one fix as make_round_step)
             lam_t = clock.lam_at(rnd0)
+            ps = clock.pull_scale_at(rnd0)
             loss = lambda row, b: loss_fn(engine.unflatten_row(row), b)
             w_full = jax.lax.all_gather(w_loc, eff_cols, axis=1, tiled=True) \
                 if eff_cols else w_loc
@@ -629,7 +681,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 act0 = act_ring[0] if elastic else None
                 stages, _ = consensus.lower_stages(
                     s_engine, dcfg, lam_t, losses=sl0, grad_norms=sg0,
-                    mask=act0)
+                    mask=act0, pull_scale=ps)
                 T1 = stages[0][1]
                 n_eff = max(1, min(dcfg.overlap_chunks, tau, n_loc))
                 gram, gath = None, []
@@ -694,6 +746,19 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             else:
                 l_last, g_last = losses[-1], gns[-1]
 
+            push_vec = None
+            if lpf:
+                # EMA-filtered local progress (LPF-SGD): the own-row,
+                # own-column delta of this round's scan (zero for frozen
+                # elastic rows — their q reverted to w), row-gathered to
+                # the full (M, n_loc) slab every column shard mixes with
+                delta = w_loc - q_loc
+                if row_size > 1:
+                    delta = jax.lax.all_gather(delta, row_axes, axis=0,
+                                               tiled=True)
+                push_vec = spec.filter_mu * g_ema \
+                    + (1.0 - spec.filter_mu) * delta
+
             def gather_rows(x_loc, *, ring=False):
                 """Own-column worker rows + aux -> the full (R, n_loc)
                 view (THE consensus all-reduce of the paper). With
@@ -726,7 +791,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                     c_out, _, m = consensus.apply_round(
                         s_full, dcfg, lam_t, state.cstate, losses=sl0,
                         grad_norms=sg0, engine=s_engine, first_gram=gram,
-                        mask=act0)
+                        mask=act0, push_vec=push_vec, pull_scale=ps)
                     delta = c_out - s_full
                     outs = [q_loc + own_rows(delta)]
                     if aux:
@@ -738,7 +803,8 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                     X = gather_rows(q_loc, ring=sk)
                     newX, _, m = consensus.apply_round(
                         X, dcfg, lam_t, state.cstate, losses=l_last,
-                        grad_norms=g_last, engine=s_engine, mask=eff)
+                        grad_norms=g_last, engine=s_engine, mask=eff,
+                        push_vec=push_vec, pull_scale=ps)
                     outs = [own_rows(newX)]
                     if aux:
                         outs.append(newX[M:])
@@ -779,7 +845,8 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 X = gather_rows(q_loc)
                 c_out, cstate, metrics = consensus.apply_round(
                     snap_x, dcfg, lam_t, state.cstate,
-                    losses=snap_l, grad_norms=snap_g, engine=s_engine)
+                    losses=snap_l, grad_norms=snap_g, engine=s_engine,
+                    push_vec=push_vec, pull_scale=ps)
                 new_snap_x, new_snap_aux = X, None
                 # round-0 pipeline bubble, as in make_round_step
                 live = (t0 > 0).astype(jnp.float32)
@@ -792,7 +859,8 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 X = gather_rows(q_loc)
                 newX, cstate, metrics = consensus.apply_round(
                     X, dcfg, lam_t, state.cstate,
-                    losses=l_last, grad_norms=g_last, engine=s_engine)
+                    losses=l_last, grad_norms=g_last, engine=s_engine,
+                    push_vec=push_vec, pull_scale=ps)
                 new_snap_x = new_snap_aux = None
                 new_w = own_rows(newX)
                 new_aux = newX[M:] if aux else None
@@ -828,6 +896,8 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                         active,
                         jnp.where(eff > 0, 0, missed + 1)
                         .astype(jnp.int32)])
+            if lpf:
+                outs.append(push_vec)       # rides LAST, like the input
             return tuple(outs)
 
         opt_in = jax.tree.map(lambda l: leading_dim_spec(l, row_e), state.opt)
@@ -884,25 +954,31 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                              state.snap["missed"]])
                 in_specs.extend([P(), P(), P()])
                 out_specs.extend([P(), P(), P()])
+        if lpf:
+            # the filtered-gradient EMA: rows replicated (every column
+            # shard mixes the full M rows), columns sharded — LAST operand
+            args.append(state.cstate["g_ema"])
+            in_specs.append(P(None, col_e))
+            out_specs.append(P(None, col_e))
 
         res = list(shard_map(
             mapped, mesh=mesh, in_specs=tuple(in_specs),
             out_specs=tuple(out_specs), check_rep=False)(*args))
         new_w, opt_st, t, rnd, metrics = res[:5]
         rest = res[5:]
-        params = jnp.concatenate([new_w, rest.pop(0)], axis=0) if aux \
-            else new_w
+        cstate = {"g_ema": rest.pop()} if lpf else state.cstate
+        params = stitch([new_w, rest.pop(0)]) if aux else new_w
         if stale1:
             snap = {"x": rest[0], "losses": rest[1], "gns": rest[2]}
         elif dbuf:
             sx = rest.pop(0)
             if aux:
-                sx = jnp.concatenate([sx, rest.pop(0)], axis=0)
+                sx = stitch([sx, rest.pop(0)])
             snap = {"x": sx, "losses": rest[0], "gns": rest[1]}
         elif sk:
             sx = rest.pop(0)
             if aux:
-                sx = jnp.concatenate([sx, rest.pop(0)], axis=1)
+                sx = stitch([sx, rest.pop(0)], axis=1)
             snap = {"x": sx, "losses": rest.pop(0), "gns": rest.pop(0)}
             if elastic:
                 snap.update(act=rest.pop(0), active=rest.pop(0),
@@ -910,7 +986,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         else:
             snap = state.snap
         new_state = TrainState(params=params, opt=opt_st,
-                               cstate=state.cstate, t=t, snap=snap,
+                               cstate=cstate, t=t, snap=snap,
                                round=rnd, engine=engine)
         return new_state, metrics
 
@@ -958,8 +1034,17 @@ def shard_train_state(state: TrainState, mesh, plan, *, dcfg=None):
         snap = dict({key: put(v, P()) for key, v in snap.items()
                      if key != "x"}, x=x)
     rnd = put(state.round, P()) if state.round is not None else None
+    cstate = state.cstate
+    if cstate:
+        # method aux state (e.g. the LPF filtered-gradient EMA): 2-D
+        # (M, n) slabs shard like replicated-row snapshots, scalars/
+        # vectors replicate
+        cstate = {
+            key: put(v, P(None, flat_col_entry(mesh, v.shape[-1], plan))
+                     if jnp.ndim(v) == 2 else P())
+            for key, v in cstate.items()}
     return TrainState(params=params, opt=jax.tree.map(opt_put, state.opt),
-                      cstate=state.cstate, t=put(state.t, P()), snap=snap,
+                      cstate=cstate, t=put(state.t, P()), snap=snap,
                       round=rnd, engine=state.engine)
 
 

@@ -8,6 +8,7 @@ raises (not ``assert``) to report, since asserts are off by construction.
 """
 from __future__ import annotations
 
+import dataclasses
 import sys
 
 import numpy as np
@@ -73,6 +74,37 @@ def main():
                   lambda: consensus.apply_round(flat, dcfg, 0.1, {},
                                                 engine=eng),
                   "lsgd without losses (flat)")
+
+    # method registry: unknown names, malformed specs, flat-only methods
+    # on the tree engine, and the flat-path filtered-grad contract — all
+    # ValueError (the registry validates in __post_init__, not assert)
+    from repro.core.methods import MethodSpec, get_method
+    expect_raises(ValueError, lambda: get_method("sgd_flavour_9000"),
+                  "registry unknown method")
+    expect_raises(ValueError,
+                  lambda: MethodSpec(name="bad", doc="", weight_fn="uniform",
+                                     aux_pull=1.0),
+                  "MethodSpec aux_pull without aux row")
+    expect_raises(ValueError,
+                  lambda: MethodSpec(name="bad", doc="", weight_fn="uniform",
+                                     push_source="filtered_grad",
+                                     filter_mu=1.5),
+                  "MethodSpec filter_mu out of range")
+    expect_raises(ValueError,
+                  lambda: DPPFConfig(consensus="lpf_sgd", engine="tree"),
+                  "flat-only method on tree engine")
+    lcfg = DPPFConfig(consensus="lpf_sgd", engine="flat")
+    leng = ConsensusEngine.from_stacked(stacked, method="lpf_sgd")
+    expect_raises(ValueError,
+                  lambda: consensus.apply_round(leng.flatten(stacked), lcfg,
+                                                0.1, {}, engine=leng),
+                  "lpf_sgd without push_vec (flat)")
+    ecfg = dataclasses.replace(dcfg, exact_second_term=True)
+    expect_raises(ValueError,
+                  lambda: consensus.apply_round(
+                      flat, ecfg, 0.1, {}, losses=jnp.zeros((2,)),
+                      engine=eng, mask=jnp.ones((2,))),
+                  "elastic mask with exact second term")
 
     from repro.launch.mesh import make_hier_engine_mesh, make_hierarchical_mesh
     expect_raises(ValueError, lambda: make_hierarchical_mesh(7, 5, 3),

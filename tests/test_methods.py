@@ -1,0 +1,460 @@
+"""MethodSpec registry: registry-vs-legacy bit parity for the five
+pre-refactor methods, row-stochastic coefficient stages under arbitrary
+participation masks (hypothesis property), registry error surfaces, the
+three new methods (parle / lpf_sgd / entropy_sgd) under staleness_k +
+checkpoint resume, and the 8-device sharded trajectory pins on the flat
+8x1 and hierarchical 2x2x2 meshes.
+
+The legacy lowering below is the pre-registry ``consensus.lower_stages``
+embedded VERBATIM (if/elif ladder and all): the generic MethodSpec-driven
+lowering must reproduce its stage lists bit-for-bit — same stage kinds,
+same order, bit-identical (T, c0, c1) arrays — for every pre-existing
+method, push variant, and elastic mask. Bit-identical stage lists make
+every downstream path (exact, staleness1, doublebuf, staleness_k; fast /
+precise / kernel execution) identical by construction; the subprocess leg
+additionally pins the sharded trajectories themselves."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DPPFConfig
+from repro.core import consensus, methods
+from repro.core.engine import ConsensusEngine
+from repro.optim import make_optimizer
+from repro.train import init_train_state, make_round_step
+from repro.checkpoint import load_train_state, save_train_state
+from tests._hyp import given, settings, st
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+LEGACY_METHODS = ("simple_avg", "hard", "easgd", "lsgd", "mgrawa")
+EASGD_BETA = methods.EASGD_BETA
+
+
+# ---------------------------------------------------------------------------
+# the pre-registry lowering, embedded verbatim (the bit-parity oracle)
+# ---------------------------------------------------------------------------
+
+def _legacy_lower_stages(engine, dcfg, lam_t, *, losses=None,
+                         grad_norms=None, push_from="average", mask=None):
+    method = dcfg.consensus
+    alpha = 1.0 if method == "hard" else dcfg.alpha
+    L = engine.layout
+    M, R = L.M, L.R
+    eye = jnp.eye(R, dtype=jnp.float32)
+    u = engine.uniform
+    zeros = jnp.zeros((R,), jnp.float32)
+    act = gate = None
+    if mask is not None:
+        act = jnp.asarray(mask, jnp.float32)
+        mfull = zeros.at[:M].set(act)
+        u = mfull / jnp.maximum(jnp.sum(mfull), 1.0)
+        gate = jnp.ones((R,), jnp.float32).at[:M].set(act)
+
+    def worker_T(w):
+        T = jnp.broadcast_to(w, (R, R))
+        if L.aux:
+            T = jnp.concatenate([T[:M], eye[M:]], axis=0)
+        return T
+
+    stages = []
+    leader_w = None
+    if method != "ddp":
+        c_pull = zeros.at[:M].set(alpha)
+        if method == "simple_avg" and dcfg.push \
+                and not dcfg.exact_second_term and push_from == "average":
+            stages.append(("coef", worker_T(u), c_pull,
+                           zeros.at[:M].set(-lam_t)))
+        else:
+            if method in ("simple_avg", "hard"):
+                T1 = worker_T(u)
+            elif method == "easgd":
+                w_z = EASGD_BETA * u + (1.0 - EASGD_BETA) * eye[M]
+                T1 = jnp.broadcast_to(w_z, (R, R))
+                c_pull = c_pull.at[M:].set(1.0)
+            elif method == "lsgd":
+                if losses is None:
+                    raise ValueError("lsgd needs per-worker losses")
+                lsgd_losses = losses
+                if act is not None:
+                    lsgd_losses = jnp.where(act > 0, losses, jnp.inf)
+                leader_w = jax.nn.one_hot(jnp.argmin(lsgd_losses), R,
+                                          dtype=jnp.float32)
+                T1 = worker_T(leader_w)
+            elif method == "mgrawa":
+                if grad_norms is None:
+                    raise ValueError("mgrawa needs grad norms")
+                w = 1.0 / jnp.maximum(grad_norms, 1e-12)
+                if act is not None:
+                    w = w * act
+                w = w / jnp.maximum(jnp.sum(w), 1e-12)
+                T1 = worker_T(zeros.at[:M].set(w))
+            else:
+                raise ValueError(method)
+            stages.append(("coef", T1, c_pull, zeros))
+            if dcfg.push:
+                if dcfg.exact_second_term:
+                    stages.append(("exact", lam_t * M))
+                elif push_from == "leader" and leader_w is not None:
+                    stages.append(("coef", worker_T(leader_w), zeros,
+                                   zeros.at[:M].set(-lam_t)))
+                else:
+                    stages.append(("coef", worker_T(u), zeros,
+                                   zeros.at[:M].set(-lam_t)))
+    if gate is not None:
+        if any(s[0] == "exact" for s in stages):
+            raise ValueError("elastic mask does not support "
+                             "exact_second_term stages")
+        stages = [("coef", T, c0 * gate, c1 * gate)
+                  for (_, T, c0, c1) in stages]
+    return stages, alpha
+
+
+def _engine(method, M=6):
+    key = jax.random.PRNGKey(3)
+    stacked = {"w": jax.random.normal(key, (M, 11, 5)),
+               "b": jax.random.normal(jax.random.fold_in(key, 1), (M, 9))}
+    return ConsensusEngine.from_stacked(stacked, method=method)
+
+
+def _assert_stages_bitwise(got, want):
+    assert len(got) == len(want), (len(got), len(want))
+    for sg, sw in zip(got, want):
+        assert sg[0] == sw[0]
+        for a, b in zip(sg[1:], sw[1:]):
+            a = np.asarray(a, np.float32)
+            b = np.asarray(b, np.float32)
+            assert np.array_equal(a, b), (sg[0], np.abs(a - b).max())
+
+
+# ---------------------------------------------------------------------------
+# registry surface
+# ---------------------------------------------------------------------------
+
+def test_registry_names_aliases_and_errors():
+    names = methods.method_names(aliases=False)
+    assert tuple(names) == ("simple_avg", "hard", "easgd", "lsgd",
+                            "mgrawa", "ddp", "parle", "lpf_sgd",
+                            "entropy_sgd")
+    assert "dppf" in methods.method_names()
+    assert methods.get_method("dppf") is methods.get_method("simple_avg")
+    assert methods.get_method("grawa") is methods.get_method("mgrawa")
+    # tree-capable methods (what consensus.METHODS exposes) exclude the
+    # flat-only lpf_sgd but include the two other new methods
+    assert consensus.METHODS == ("simple_avg", "hard", "easgd", "lsgd",
+                                 "mgrawa", "ddp", "parle", "entropy_sgd")
+    with pytest.raises(ValueError, match="unknown consensus method"):
+        methods.get_method("nope")
+
+
+def test_methodspec_contract_validation():
+    with pytest.raises(ValueError, match="aux_pull"):
+        methods.MethodSpec(name="x", doc="", aux_pull=0.5)
+    with pytest.raises(ValueError, match="center_beta"):
+        methods.MethodSpec(name="x", doc="", aux_rows=1, aux_pull=1.0,
+                           center_beta=1.5)
+    with pytest.raises(ValueError, match="push_source"):
+        methods.MethodSpec(name="x", doc="", push_source="telepathy")
+    with pytest.raises(ValueError, match="filter_mu"):
+        methods.MethodSpec(name="x", doc="", push_source="filtered_grad",
+                           filter_mu=1.0)
+    with pytest.raises(ValueError, match="requires engine='flat'"):
+        DPPFConfig(consensus="lpf_sgd", engine="tree")
+    with pytest.raises(ValueError, match="unknown consensus method"):
+        DPPFConfig(consensus="sgd")
+
+
+# ---------------------------------------------------------------------------
+# registry-vs-legacy bit parity (the tentpole pin)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", LEGACY_METHODS + ("ddp",))
+@pytest.mark.parametrize("variant", ["fused", "push", "no_push", "exact",
+                                     "leader"])
+@pytest.mark.parametrize("masked", [False, True])
+def test_registry_matches_legacy_lowering_bitwise(method, variant, masked):
+    eng = _engine(method)
+    M = eng.layout.M
+    losses = jnp.asarray([3.0, 1.0, 2.0, 4.0, 0.5, 2.5])
+    gns = jnp.asarray([1.0, 2.0, 0.5, 1.0, 4.0, 0.25])
+    kw = dict(push=variant != "no_push",
+              exact_second_term=variant == "exact")
+    push_from = "leader" if variant == "leader" else "average"
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0, 0.0, 1.0]) if masked else None
+    if masked and variant == "exact":
+        dcfg = DPPFConfig(alpha=0.3, lam=0.4, consensus=method,
+                          engine="flat", **kw)
+        for fn in (_legacy_lower_stages, consensus.lower_stages):
+            if method == "ddp":
+                continue        # empty stage list, nothing to gate
+            with pytest.raises(ValueError, match="elastic mask"):
+                fn(eng, dcfg, 0.25, losses=losses, grad_norms=gns,
+                   push_from=push_from, mask=mask)
+        return
+    dcfg = DPPFConfig(alpha=0.3, lam=0.4, consensus=method, engine="flat",
+                      **kw)
+    want, alpha_l = _legacy_lower_stages(
+        eng, dcfg, 0.25, losses=losses, grad_norms=gns,
+        push_from=push_from, mask=mask)
+    got, alpha_n = consensus.lower_stages(
+        eng, dcfg, 0.25, losses=losses, grad_norms=gns,
+        push_from=push_from, mask=mask)
+    assert float(alpha_l) == float(alpha_n)
+    _assert_stages_bitwise(got, want)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: coefficient stages stay row-stochastic under
+# arbitrary participation masks
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=24, deadline=None)
+@given(method=st.sampled_from([m for m in consensus.METHODS
+                               if m != "ddp"]),
+       mask_bits=st.integers(min_value=1, max_value=62),
+       alpha=st.floats(min_value=0.01, max_value=1.0),
+       seed=st.integers(min_value=0, max_value=2 ** 16))
+def test_coef_stages_row_stochastic_under_masks(method, mask_bits, alpha,
+                                                seed):
+    """Every registered method's target-weight matrix T is row-stochastic
+    (rows sum to 1 — a mixing stage moves rows toward convex combinations),
+    its masked renormalization puts zero weight on inactive rows, and the
+    coefficient gate zeroes inactive pull/push entries."""
+    eng = _engine(method)
+    M, R = eng.layout.M, eng.layout.R
+    mask = jnp.asarray([(mask_bits >> i) & 1 for i in range(M)],
+                       jnp.float32)
+    if float(mask.sum()) == 0:
+        mask = mask.at[0].set(1.0)
+    key = jax.random.PRNGKey(seed)
+    losses = jax.random.uniform(key, (M,), minval=0.1, maxval=5.0)
+    gns = jax.random.uniform(jax.random.fold_in(key, 1), (M,),
+                             minval=0.1, maxval=5.0)
+    dcfg = DPPFConfig(alpha=float(alpha), lam=0.4, consensus=method,
+                      engine="flat")
+    stages, _ = consensus.lower_stages(eng, dcfg, 0.25, losses=losses,
+                                       grad_norms=gns, mask=mask)
+    act = np.asarray(mask)
+    for kind, T, c0, c1 in stages:
+        assert kind == "coef"
+        T = np.asarray(T, np.float32)
+        np.testing.assert_allclose(T.sum(axis=1), np.ones(R), atol=1e-5)
+        # no target weight on inactive worker rows
+        assert np.abs(T[:, :M] * (1.0 - act)).max() < 1e-6
+        # inactive rows neither pull nor push
+        for c in (np.asarray(c0), np.asarray(c1)):
+            assert np.abs(c[:M] * (1.0 - act)).max() == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the three new methods: staleness_k + checkpoint resume
+# ---------------------------------------------------------------------------
+
+def _mlp_setup():
+    from benchmarks.common import mlp_init, mlp_loss
+    dim, ncls, width, M, tau = 10, 3, 6, 4, 3
+    opt = make_optimizer("sgd", momentum=0.9)
+    p0 = lambda k: mlp_init(k, dim, ncls, width)
+
+    def batches(seed):
+        k = jax.random.PRNGKey(seed)
+        return {"x": jax.random.normal(k, (tau, M, 6, dim)),
+                "y": jax.random.randint(jax.random.fold_in(k, 1),
+                                        (tau, M, 6), 0, ncls)}
+    return mlp_loss, opt, p0, batches, M, tau
+
+
+@pytest.mark.parametrize("method", ["parle", "lpf_sgd", "entropy_sgd"])
+def test_new_methods_staleness_k_checkpoint_resume(method, tmp_path):
+    """Each new method trains under the deepest overlap mode and survives
+    a mid-pipeline checkpoint round trip: save after round 2, reload into
+    a FRESH init (params, optimizer, snapshot ring, and method aux state
+    like the LPF g_ema all restored), continue, and land bit-exactly on
+    the uninterrupted trajectory."""
+    loss, opt, p0, batches, M, tau = _mlp_setup()
+    dcfg = DPPFConfig(alpha=0.2, lam=0.3, tau=tau, consensus=method,
+                      engine="flat", overlap="staleness_k", staleness=2,
+                      overlap_chunks=2, lam_schedule="fixed")
+    step = jax.jit(make_round_step(loss, opt, dcfg, base_lr=0.05,
+                                   total_steps=tau * 6))
+    key = jax.random.PRNGKey(0)
+
+    st_a = init_train_state(p0, opt, dcfg, M, key)
+    for r in range(6):
+        st_a, m_a = step(st_a, batches(r))
+
+    st_b = init_train_state(p0, opt, dcfg, M, key)
+    for r in range(3):
+        st_b, _ = step(st_b, batches(r))
+    path = str(tmp_path / f"{method}.state.npz")
+    save_train_state(path, st_b)
+    st_c = load_train_state(path, init_train_state(p0, opt, dcfg, M, key))
+    if method == "lpf_sgd":
+        assert "g_ema" in st_c.cstate
+        assert float(jnp.abs(st_c.cstate["g_ema"]).sum()) > 0
+    for r in range(3, 6):
+        st_c, m_c = step(st_c, batches(r))
+    assert np.array_equal(np.asarray(st_a.params), np.asarray(st_c.params))
+    assert float(m_a["train_loss"]) == float(m_c["train_loss"])
+
+
+def test_parle_center_and_ramp():
+    """Parle keeps an EASGD-style center aux row (beta=0.5) and ramps its
+    replica coupling with the lam schedule instead of pushing."""
+    spec = methods.get_method("parle")
+    assert spec.aux_rows == 1 and spec.center_beta == 0.5
+    assert spec.pull_ramp and not spec.pushes
+    eng = _engine("parle")
+    dcfg = DPPFConfig(alpha=0.4, lam=0.5, consensus="parle", engine="flat")
+    # at lam_t = lam/2 the coupling ramp halves the pull coefficient
+    stages, pull = consensus.lower_stages(eng, dcfg, 0.25)
+    assert len(stages) == 1          # no push stage
+    np.testing.assert_allclose(float(pull), 0.4 * 0.5)
+    c0 = np.asarray(stages[0][2])
+    np.testing.assert_allclose(c0[:eng.layout.M], 0.2, atol=1e-6)
+    assert c0[-1] == 1.0             # center row adopts its target exactly
+
+
+def test_entropy_sgd_inner_outer_plan():
+    """Entropy-SGD splits each base round into inner_rounds sub-rounds;
+    inner sub-rounds scale the pull by inner_pull (the local-entropy
+    exploration phase), the closing outer sub-round restores full pull."""
+    from repro.train.clock import RoundClock
+    dcfg = DPPFConfig(tau=4, consensus="entropy_sgd", engine="flat")
+    clock = RoundClock.from_config(dcfg, base_lr=0.1, total_steps=8)
+    d = clock.describe()
+    assert d["inner_rounds"] == 2 and d["inner_pull"] == 0.25
+    scopes = [r["scope"] for r in d["plan"]]
+    assert scopes == ["inner", "outer", "inner", "outer"]
+    assert float(clock.pull_scale_at(0)) == 0.25
+    assert float(clock.pull_scale_at(1)) == 1.0
+    # non-entropy methods keep the legacy single-phase plan untouched
+    base = RoundClock.from_config(
+        DPPFConfig(tau=4, consensus="simple_avg"), base_lr=0.1,
+        total_steps=8)
+    assert base.total_rounds == 2
+    assert "inner_rounds" not in base.describe()
+    assert base.pull_scale_at(0) == 1.0
+
+
+def test_lpf_sgd_filtered_push_moves_along_ema():
+    """The LPF-SGD vec stage pushes along the NORMALIZED filtered
+    gradient: row i moves by -lam_t * g_i / ||g|| and the EMA field is
+    carried in cstate (not an aux row)."""
+    eng = _engine("lpf_sgd")
+    M, n = eng.layout.M, eng.layout.n
+    assert methods.get_method("lpf_sgd").aux_rows == 0
+    dcfg = DPPFConfig(alpha=0.0, lam=0.5, consensus="lpf_sgd",
+                      engine="flat", push=True)
+    key = jax.random.PRNGKey(5)
+    flat = jax.random.normal(key, (M, n))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (M, n))
+    new, _, _ = consensus.apply_round(
+        flat, dcfg, 0.25, {"g_ema": g}, engine=eng, push_vec=g)
+    r = jnp.sqrt(jnp.sum(g.astype(jnp.float32) ** 2, axis=1))
+    want = flat - 0.25 * g / jnp.maximum(r, eng.eps)[:, None]
+    np.testing.assert_allclose(np.asarray(new), np.asarray(want),
+                               atol=1e-5)
+    with pytest.raises(ValueError, match="push_vec"):
+        consensus.apply_round(flat, dcfg, 0.25, {"g_ema": g}, engine=eng)
+
+
+# ---------------------------------------------------------------------------
+# 8-device sharded pins: flat 8x1 + hier 2x2x2, all overlap modes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_methods_sharded_8dev_flat_and_hier():
+    """On 8 forced host devices, the registry lowering's sharded
+    trajectories (flat 8x1 and hierarchical 2x2x2 meshes) match the
+    single-device trace for the legacy AND the new methods across
+    exact / staleness1 / doublebuf / staleness_k (precise engine,
+    <= 1e-6). Together with the bit-identical stage lists pinned above,
+    this pins registry-vs-legacy parity on both meshes."""
+    body = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.configs import DPPFConfig, MeshPlan
+from repro.train import (init_train_state, make_round_step,
+                         make_sharded_round_step, shard_train_state)
+from repro.optim import make_optimizer
+from benchmarks.common import mlp_init, mlp_loss
+from repro.launch.mesh import make_hier_engine_mesh
+
+dim, ncls, width, M, tau = 12, 3, 6, 8, 3
+key = jax.random.PRNGKey(0)
+opt = make_optimizer("sgd", momentum=0.9)
+p0 = lambda k: mlp_init(k, dim, ncls, width)
+def batches(seed):
+    k = jax.random.PRNGKey(seed)
+    return {"x": jax.random.normal(k, (tau, M, 6, dim)),
+            "y": jax.random.randint(jax.random.fold_in(k, 1),
+                                    (tau, M, 6), 0, ncls)}
+
+fmesh = Mesh(np.asarray(jax.devices()).reshape(8, 1), ("data", "model"))
+fplan = MeshPlan(worker_axes=("data",), model_axes=("model",))
+hmesh, hplan = make_hier_engine_mesh(2, 2, 2)
+
+def run(dcfg, mesh=None, plan=None, rounds=3):
+    st = init_train_state(p0, opt, dcfg, M, key)
+    st = dataclasses.replace(
+        st, engine=dataclasses.replace(st.engine, precise=True))
+    if mesh is not None:
+        st = shard_train_state(st, mesh, plan, dcfg=dcfg)
+        fn = jax.jit(make_sharded_round_step(
+            mlp_loss, opt, dcfg, mesh=mesh, plan=plan, base_lr=0.05,
+            total_steps=30))
+    else:
+        fn = jax.jit(make_round_step(mlp_loss, opt, dcfg, base_lr=0.05,
+                                     total_steps=30))
+    for r in range(rounds):
+        st, m = fn(st, batches(r))
+    return st
+
+OVERLAPS = (("none", {}), ("staleness1", {}),
+            ("doublebuf", dict(overlap_chunks=2)),
+            ("staleness_k", dict(staleness=2, overlap_chunks=2)))
+for method in ("simple_avg", "hard", "easgd", "lsgd", "mgrawa",
+               "parle", "lpf_sgd", "entropy_sgd"):
+    for overlap, extra in OVERLAPS:
+        if method == "hard" and extra:
+            # hard's pull fully collapses the fleet, so its push sits at
+            # the documented Gram noise floor (engine docstring); chunked
+            # overlap changes the Gram summation order and the floor
+            # noise amplifies chaotically. Pre-existing behavior — the
+            # sharded-vs-sharded doublebuf pins in test_sharded_round.py
+            # compare identical chunkings instead.
+            continue
+        base = dict(alpha=0.2, lam=0.4, tau=tau, consensus=method,
+                    engine="flat", lam_schedule="fixed", overlap=overlap,
+                    **extra)
+        s_ref = run(DPPFConfig(**base))
+        for mname, mesh, plan in (("flat8x1", fmesh, fplan),
+                                  ("hier2x2x2", hmesh, hplan)):
+            s_sh = run(DPPFConfig(**base), mesh, plan)
+            dp = float(jnp.max(jnp.abs(s_ref.params - s_sh.params)))
+            assert dp <= 1e-6, (method, overlap, mname, dp)
+            if method == "lpf_sgd":
+                dg = float(jnp.max(jnp.abs(
+                    s_ref.cstate["g_ema"] - s_sh.cstate["g_ema"])))
+                assert dg <= 1e-6, (method, overlap, mname, dg)
+        print(method, overlap, "ok")
+print("ALL OK")
+"""
+    env = dict(os.environ, PYTHONPATH=SRC + os.pathsep + ROOT)
+    out = subprocess.run([sys.executable, "-c", body], capture_output=True,
+                         text=True, env=env, timeout=560, cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-4000:]
+    assert "ALL OK" in out.stdout
