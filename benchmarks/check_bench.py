@@ -1,6 +1,6 @@
 """Compare freshly generated bench JSONs (``BENCH_roundclock.json``,
-``BENCH_overlap.json``, ``BENCH_serving.json``) against their committed
-baselines (ROADMAP bench-tracking item).
+``BENCH_overlap.json``, ``BENCH_serving.json``, ``BENCH_autotune.json``)
+against their committed baselines (ROADMAP bench-tracking item).
 
 Two classes of fields:
 
@@ -19,6 +19,16 @@ bit-parity booleans pinning ``ring_bytes_per_hop <= gather_bytes`` and the
 ``staleness_k >= doublebuf >= staleness1 >= exact`` modeled-throughput
 ordering; ``us_ring``/``us_gather``/``speedup_staleness_k`` ride the
 timing prefixes.
+
+The autotune baseline (``BENCH_autotune.json``) pins the searched
+TunePlan's STRUCTURAL surface: the probe ladder (batches/taus/chunks/ok
+flags under an injected RESOURCE_EXHAUSTED frontier), the chosen point,
+``probes_within_budget``, ``chosen_dominates_model`` (selection goes
+through the calibrated roofline model — a host-independent argmin), and
+``backoff_exercised``. Per-probe ``us_round`` measurements,
+``residual_scale`` (the measured/modeled calibration), its
+``max_abs_log_residual``, and ``dominates_measured`` are host-relative
+timing fields.
 
 The ``method_zoo`` key (also in ``BENCH_overlap.json``) is registry
 driven: its ``method_names`` list and per-method dict KEYS are structural
@@ -50,7 +60,13 @@ import sys
 TIMING_KEYS = ("wall_s", "speedup", "flat_vs_hier",
                # serving bench (BENCH_serving.json): throughput/latency are
                # host-relative; steps/occupancy stay structural
-               "tok_s", "ttft_ms", "compile_s")
+               "tok_s", "ttft_ms", "compile_s",
+               # autotune bench (BENCH_autotune.json): the measured/modeled
+               # calibration and measured-time dominance are host-relative;
+               # the probe ladder, chosen point, and model-dominance gate
+               # stay structural (per-probe us_round rides the us_ prefix)
+               "residual_scale", "max_abs_log_residual",
+               "dominates_measured")
 TIMING_PREFIXES = ("us_", "speedup_")
 # environment fields: allowed to differ, reported only
 INFO_KEYS = ("backend",)

@@ -303,20 +303,18 @@ def bench_overlap_round(*, smoke=False):
         # per-device round: compute window = tau local steps of the MLP
         # (fwd+bwd ~ 3x fwd flops) on m_loc workers; consensus bytes =
         # worker-row all-gather + (R, R) partial-Gram psum. The per-mode
-        # formulas live in launch.roofline.overlap_model (the ONE copy —
-        # also behind the dry-run §Overlap-roofline table). staleness_k
+        # formulas live in launch.roofline (probe_round_model routes
+        # through overlap_model — the ONE copy, shared with the autotune
+        # probes and the dry-run §Overlap-roofline table). staleness_k
         # reads the k-deep ring entry (ppermute ring wire + k compute
         # windows to hide it behind).
         dims = [data["dim"], width, width, data["n_classes"]]
         fwd = 2 * bs * sum(a * b for a, b in zip(dims, dims[1:]))
-        work_s = 3 * fwd * tau * (M // rows_sz) / rf.PEAK_FLOPS
         data_bytes = R * (n // cols_sz) * 4 + R * R * 4
-        rows = rf.overlap_model({"compute_s": work_s, "memory_s": 0.0},
-                                {"data": data_bytes}, R=R)
-        if mode == "staleness_k":
-            return rows["staleness_k_s"][str(k)] * 1e6
-        return rows[{"none": "exact_s", "staleness1": "staleness1_s",
-                     "doublebuf": "doublebuf_s"}[mode]] * 1e6
+        return rf.probe_round_model(
+            work_s_per_step=3 * fwd * (M // rows_sz) / rf.PEAK_FLOPS,
+            tau=tau, gather_bytes=data_bytes, R=R, mode=mode,
+            staleness=k if mode == "staleness_k" else 1) * 1e6
 
     K_DEPTH = 2
     for mode, chunks in (("none", 1), ("staleness1", 1), ("doublebuf", 4),
@@ -473,6 +471,93 @@ def bench_method_zoo(*, smoke=False):
     return out
 
 
+def bench_autotune(*, smoke=False):
+    """THE autotune acceptance row (DESIGN.md §Autotune): the probe
+    search on the REAL round step with an INJECTED OOM frontier
+    (``inject_oom_above`` — the same ``--tune-oom-above`` CI hook), so
+    the committed record pins a deterministic ladder: doubling 2, 4, 8
+    ok -> 16 OOM, binary refine 12 ok / 14, 13 OOM -> frontier 12, then
+    the joint (tau, chunks) sweep at batch 12.
+
+    Structural keys (host-independent; check_bench guards them on the
+    committed ``BENCH_autotune.json``):
+
+    * ``probes_within_budget`` — probe count bounded by the budget,
+    * ``chosen_dominates_model`` — the chosen point beats every probed
+      neighbor under the calibrated roofline model (per-sample round
+      time; the calibration scale cannot flip an argmin),
+    * ``backoff_exercised`` — the injected-OOM path really ran
+      (``failures`` non-empty),
+    * the plan's probe ladder itself (batches/taus/chunks/ok flags).
+
+    Measured ``us_round`` per probe and ``residual_scale`` are
+    host-relative timing fields."""
+    from repro.train.autotune import (
+        TuneSpace, autotune, inject_oom_above, make_round_probe_runner,
+    )
+    from repro.launch import roofline as rf
+    data = default_data()
+    M = 4
+    width = 32 if smoke else 128
+    reps = 2 if smoke else 10
+    LIMIT = 12                       # injected feasibility frontier
+    dcfg = DPPFConfig(alpha=0.1, lam=0.5, tau=4, engine="flat",
+                      overlap="doublebuf", overlap_chunks=1)
+    opt = make_optimizer("sgd")
+    init = lambda k: mlp_init(k, data["dim"], data["n_classes"],
+                              width=width)
+
+    def batch_fn(cand):
+        return {"x": jnp.zeros((cand.tau, M, cand.batch, data["dim"])),
+                "y": jnp.zeros((cand.tau, M, cand.batch), jnp.int32)}
+
+    runner = inject_oom_above(
+        make_round_probe_runner(init, mlp_loss, opt, dcfg, M, batch_fn,
+                                reps=reps), LIMIT)
+    n = init_train_state(init, opt, dcfg, M,
+                         jax.random.PRNGKey(0)).engine.layout.n
+
+    def model_fn(cand):
+        # the same accounting as bench_overlap_round: MLP fwd+bwd ~ 3x
+        # fwd flops per local step, worker-row gather + (R, R) psum
+        dims = [data["dim"], width, width, data["n_classes"]]
+        fwd = 2 * cand.batch * sum(a * b for a, b in zip(dims, dims[1:]))
+        return rf.probe_round_model(
+            work_s_per_step=3 * fwd * M / rf.PEAK_FLOPS, tau=cand.tau,
+            gather_bytes=M * n * 4 + M * M * 4, R=M,
+            mode="doublebuf") * 1e6
+
+    space = TuneSpace(min_batch=2, max_batch=32, taus=(2, 4),
+                      chunks=(1, 2), probe_budget=16, overlap="doublebuf")
+    plan = autotune(runner, model_fn, space)
+    out = {
+        "workers": M, "width": width, "oom_limit": LIMIT,
+        "space": {"min_batch": space.min_batch,
+                  "max_batch": space.max_batch, "taus": list(space.taus),
+                  "chunks": list(space.chunks),
+                  "probe_budget": space.probe_budget,
+                  "overlap": space.overlap},
+        "plan": plan.to_dict(),
+        "probes_within_budget": plan.probes_used <= space.probe_budget,
+        "chosen_dominates_model": plan.dominates_model,
+        "backoff_exercised": bool(plan.failures),
+        "dominates_measured": plan.dominates_measured,
+    }
+    csv("microbench", op="autotune",
+        chosen=f"batch{plan.chosen.batch}_tau{plan.chosen.tau}"
+               f"_ch{plan.chosen.overlap_chunks}",
+        probes_used=plan.probes_used,
+        oom_batches="/".join(str(b) for b in plan.failures),
+        probes_within_budget=out["probes_within_budget"],
+        chosen_dominates_model=out["chosen_dominates_model"],
+        backoff_exercised=out["backoff_exercised"],
+        note="probe search on the real round step under an injected "
+             "RESOURCE_EXHAUSTED frontier (batch > 12 fails); chosen "
+             "point beats every probed neighbor under the calibrated "
+             "roofline model")
+    return out
+
+
 def bench_roundclock(*, smoke=False):
     """QSR RoundClock vs fixed tau: communication rounds (= consensus
     all-reduces) saved at the same step budget, and the wall cost of the
@@ -524,6 +609,7 @@ def run(*, smoke=False):
     overlap_row = bench_overlap_round(smoke=smoke)
     ring_row = bench_ring_round(smoke=smoke)
     zoo_row = bench_method_zoo(smoke=smoke)
+    autotune_row = bench_autotune(smoke=smoke)
     roundclock = bench_roundclock(smoke=smoke)
     # machine-readable perf trajectory across PRs (repo root)
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -548,6 +634,15 @@ def run(*, smoke=False):
                   sort_keys=True)
         f.write("\n")
     print(f"wrote {opath}")
+    # the autotune acceptance baseline: the searched TunePlan (probe
+    # ladder, injected-OOM failures, chosen point) plus the structural
+    # gates check_bench pins (probe budget, model dominance, backoff)
+    apath = os.path.join(root, "BENCH_autotune.json")
+    with open(apath, "w") as f:
+        json.dump({"smoke": smoke, "backend": jax.default_backend(),
+                   "autotune": autotune_row}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {apath}")
 
 
 if __name__ == "__main__":

@@ -347,6 +347,61 @@ def zoo_section():
     return "\n".join(out)
 
 
+def autotune_section():
+    """Render the committed ``BENCH_autotune.json``: the ``--autotune``
+    probe search on the real round step under an injected
+    RESOURCE_EXHAUSTED frontier — the searched operating point that
+    superseded the hand-written hillclimb (``opt``/``seqshard``/
+    ``hier_opt``) plan records."""
+    path = os.path.join(ROOT, "BENCH_autotune.json")
+    if not os.path.exists(path):
+        return ("*(`BENCH_autotune.json` not committed yet — run "
+                "`PYTHONPATH=src:. python benchmarks/microbench.py "
+                "--smoke` and commit it.)*")
+    with open(path) as f:
+        bench = json.load(f)
+    a = bench["autotune"]
+    plan, chosen = a["plan"], a["plan"]["chosen"]
+    gates = ", ".join(f"`{k}`={a[k]}" for k in (
+        "probes_within_budget", "chosen_dominates_model",
+        "backoff_exercised"))
+    out = [
+        "One flag (`launch/train.py --autotune`) replaces the committed "
+        "hillclimb plan sweeps: a probe search over (batch, tau, "
+        "overlap_chunks) runs REAL rounds, doubles batch until the device "
+        "(or the `--tune-oom-above` CI fault hook) raises "
+        "RESOURCE_EXHAUSTED, binary-refines to the feasibility frontier, "
+        "then sweeps (tau, chunks) at that batch. Selection goes through "
+        "the roofline model calibrated against the measured probes "
+        "(`launch/roofline.py::reconcile_probes`), so the chosen point is "
+        "a host-independent argmin; the former `opt`/`seqshard`/"
+        "`hier_opt` dry-run records are retired (DESIGN.md §Autotune).",
+        "",
+        f"Committed baseline: `BENCH_autotune.json` — {a['workers']} "
+        f"workers, width {a['width']}, injected OOM frontier at batch "
+        f"{a['oom_limit']}, budget {plan['probe_budget']} "
+        f"({plan['probes_used']} probes used). Structural gates: {gates}; "
+        f"chosen point **batch {chosen['batch']}, tau {chosen['tau']}, "
+        f"chunks {chosen['overlap_chunks']}** ({plan['overlap']}), "
+        f"failures at batches {plan['failures']}.",
+        "",
+        "| probe | batch | tau | chunks | ok | modeled us |",
+        "|---|---|---|---|---|---|",
+    ]
+    for i, p in enumerate(plan["probes"]):
+        ok = "yes" if p["ok"] else "**OOM**"
+        out.append(f"| {i} | {p['batch']} | {p['tau']} | "
+                   f"{p['overlap_chunks']} | {ok} | {p['modeled_us']} |")
+    out += [
+        "",
+        "Per-probe `us_round`, the measured/modeled `residual_scale`, and "
+        "`dominates_measured` are host-relative timing fields; the ladder "
+        "itself (batches/taus/chunks/ok flags) and the chosen point are "
+        "structural (`benchmarks/check_bench.py`).",
+    ]
+    return "\n".join(out)
+
+
 MISSING_DRYRUN = (
     "*(dry-run records not present — populate `results/dryrun/` with "
     "`PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both` "
@@ -450,29 +505,23 @@ def render() -> str:
                            "llama4-scout-17b-a16e", "dbrx-132b"])
         if any(k[3] == "ddp" for k in recs) else MISSING_DRYRUN,
         "",
-        "## Hillclimb comparisons",
+        "## Autotune — searched operating point (`--autotune`)",
+        "",
+        autotune_section(),
+        "",
+        "## Hierarchical-mesh comparison",
         "",
     ]
     if recs:
         sections += [
-            perf_compare(recs, "xlstm-350m", "train_4k",
-                         ["baseline", "opt"]), "",
-            perf_compare(recs, "xlstm-350m", "prefill_32k",
-                         ["baseline", "opt"], mode="prefill"), "",
-            perf_compare(recs, "llama4-scout-17b-a16e", "train_4k",
-                         ["baseline", "opt", "seqshard"]), "",
-            perf_compare(recs, "gemma2-2b", "train_4k",
-                         ["baseline", "seqshard"]), "",
-            perf_compare(recs, "yi-6b", "train_4k",
-                         ["baseline", "seqshard"]), "",
             perf_compare(recs, "qwen2-72b", "train_4k",
-                         ["baseline", "hier", "opt", "hier_opt"]),
+                         ["baseline", "hier"]),
         ]
     else:
         sections.append(MISSING_DRYRUN)
     sections += [
         "",
-        "Hierarchical-mesh plans (`--plan hier` / `hier_opt`; "
+        "Hierarchical-mesh plans (`--plan hier`; "
         "`launch/train.py --mesh workers,fsdp,model` for CPU-runnable "
         "smokes) FSDP-shard weight storage within each DPPF worker — see "
         "DESIGN.md §Hierarchical-mesh for the axis layout and collective "

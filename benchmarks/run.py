@@ -19,8 +19,9 @@ ARTIFACTS = {
     "microbench": (
         "—", "benchmarks/microbench.py",
         "hot-path microbenches (engine_vs_tree, sharded_round, "
-        "hierarchical_round, overlap_round, method_zoo, roundclock); "
-        "writes BENCH_roundclock.json + BENCH_overlap.json"),
+        "hierarchical_round, overlap_round, method_zoo, autotune, "
+        "roundclock); writes BENCH_roundclock.json + BENCH_overlap.json "
+        "+ BENCH_autotune.json (the --autotune probe-search baseline)"),
     "theorem1": (
         "Thm. 1", "benchmarks/theorem1_width.py",
         "asymptotic valley width -> lambda/alpha on the proof recurrence "

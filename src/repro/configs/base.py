@@ -347,6 +347,32 @@ class DPPFConfig:
                 f"elastic_catchup must be in [0, 1], got "
                 f"{self.elastic_catchup}")
 
+    def apply_tune_plan(self, plan) -> "DPPFConfig":
+        """Graft an autotune ``TunePlan`` (dataclass or its ``to_dict()``
+        JSON form) onto this config: tau, overlap mode/chunks/staleness
+        from the searched point, ``tau_schedule`` pinned to "fixed" —
+        autotune placed tau at the measured comm/compute crossover, and a
+        QSR schedule would re-adapt it away from that point, so the
+        combination is rejected. ``dataclasses.replace`` re-runs
+        ``__post_init__``, surfacing engine/overlap conflicts between the
+        plan and this config."""
+        if self.tau_schedule == "qsr" or self.qsr_beta > 0:
+            raise ValueError(
+                "autotune picks a fixed tau from the measured comm/compute "
+                "crossover; tau_schedule='qsr' would re-adapt it — drop "
+                "qsr_beta / use tau_schedule='fixed' when tuning")
+        if isinstance(plan, dict):
+            chosen = plan["chosen"]
+            tau, chunks = int(chosen["tau"]), int(chosen["overlap_chunks"])
+            overlap = str(plan.get("overlap", "none"))
+            staleness = int(plan.get("staleness", 1))
+        else:
+            tau, chunks = int(plan.chosen.tau), int(plan.chosen.overlap_chunks)
+            overlap, staleness = plan.overlap, int(plan.staleness)
+        return dataclasses.replace(
+            self, tau=tau, overlap=overlap, overlap_chunks=chunks,
+            staleness=staleness, tau_schedule="fixed")
+
     @property
     def valley_width(self) -> float:
         """Theorem 1 target: lim E||Delta+|| = lambda/alpha."""

@@ -16,6 +16,13 @@ Plans:
   baseline  worker=data axis (M=16/32), TP=16  (the paper-faithful mapping)
   hier      hierarchical DPPF: M=4 workers x fsdp=4 x TP=16 (memory hillclimb)
   seqshard  baseline + sequence-sharded activations (hillclimb)
+
+The hand-picked hillclimb plan SWEEPS (the committed ``opt``/``seqshard``/
+``hier_opt`` record files) are superseded by ``launch/train.py
+--autotune`` (DESIGN.md §Autotune), which probe-searches the
+batch/tau/overlap_chunks operating point on real rounds and commits a
+replayable TunePlan instead; the plan names above remain runnable for
+one-off roofline comparisons.
 """
 
 import argparse

@@ -357,6 +357,60 @@ def overlap_model(terms, axis_bytes, *, R=8, seconds_scale=1.0):
     return rows
 
 
+def probe_round_model(*, work_s_per_step: float, tau: int,
+                      gather_bytes: float, R: int = 8, mode: str = "none",
+                      staleness: int = 1) -> float:
+    """One overlap mode's modeled round seconds for an autotune probe
+    (``train/autotune.py``): tau local steps of ``work_s_per_step``
+    against a ``gather_bytes`` worker-axis consensus payload, routed
+    through ``overlap_model`` so probes, the microbench's ``modeled_us``,
+    and the committed roofline tables share ONE formula set. Pure
+    arithmetic — structural for check_bench. ValueError on an unknown
+    mode (user-facing via ``--overlap``)."""
+    if mode not in ("none", "staleness1", "doublebuf", "staleness_k"):
+        raise ValueError(f"unknown overlap mode {mode!r}")
+    if tau < 1:
+        raise ValueError(f"tau must be >= 1, got {tau}")
+    if staleness < 1:
+        raise ValueError(f"staleness must be >= 1, got {staleness}")
+    rows = overlap_model(
+        {"compute_s": work_s_per_step * tau, "memory_s": 0.0},
+        {"data": float(gather_bytes)}, R=R)
+    if mode == "none":
+        return rows["exact_s"]
+    if mode == "staleness1":
+        return rows["staleness1_s"]
+    if mode == "doublebuf":
+        return rows["doublebuf_s"]
+    by_k = rows["staleness_k_s"].get(str(staleness))
+    if by_k is not None:
+        return by_k
+    work = work_s_per_step * tau
+    return work + max(rows["ring_s"] - staleness * work, 0.0)
+
+
+def reconcile_probes(pairs):
+    """Model-vs-measured reconciliation for the autotune search:
+    ``pairs`` yields (measured_us, modeled_us). Returns the median
+    measured/modeled ratio as the calibration ``scale`` (a single
+    positive scale never changes a per-sample-score argmin, so the
+    chosen point stays a deterministic function of the feasibility
+    frontier), plus the worst-case log residual AFTER calibration —
+    how far any probe sits from the scaled model, the TunePlan's
+    model-quality record. Empty/degenerate input -> identity scale."""
+    import math as _math
+    ratios = sorted(m / md for m, md in pairs if md > 0 and m > 0)
+    if not ratios:
+        return {"scale": 1.0, "max_abs_log_residual": 0.0, "n": 0}
+    n = len(ratios)
+    if n % 2:
+        scale = ratios[n // 2]
+    else:
+        scale = 0.5 * (ratios[n // 2 - 1] + ratios[n // 2])
+    worst = max(abs(_math.log(r / scale)) for r in ratios)
+    return {"scale": scale, "max_abs_log_residual": worst, "n": n}
+
+
 def model_flops(cfg, shape, *, mode: str) -> float:
     """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode D = batch
     tokens (1 new token per sequence). Global, all chips."""

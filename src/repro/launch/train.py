@@ -140,6 +140,34 @@ def main(argv=None):
                     help="re-emit the deprecated boolean 'stale' field "
                          "next to the integer 'staleness' in "
                          "--log-every-round records")
+    ap.add_argument("--autotune", action="store_true",
+                    help="probe-search the operating point before training "
+                         "(train.autotune, DESIGN.md §Autotune): power-of-"
+                         "two batch probes with OOM backoff + binary "
+                         "refinement, then a joint (tau, overlap_chunks) "
+                         "sweep at the frontier batch, scored by measured "
+                         "round time reconciled against the roofline "
+                         "overlap model; training then runs at the chosen "
+                         "point (--batch/--max-batch bound the ladder, "
+                         "--tau seeds the tau ladder {tau, 2*tau})")
+    ap.add_argument("--tune-plan", default="", metavar="PATH",
+                    help="with --autotune: write the searched TunePlan "
+                         "JSON to PATH; without: load a committed TunePlan "
+                         "from PATH and train at its chosen point (replay "
+                         "is deterministic — the plan pins batch, tau, "
+                         "overlap_chunks)")
+    ap.add_argument("--probe-budget", type=int, default=16,
+                    help="autotune: max probes (distinct candidates "
+                         "measured or OOMed); on exhaustion the best "
+                         "point found so far wins")
+    ap.add_argument("--max-batch", type=int, default=0,
+                    help="autotune: batch-ladder ceiling (0 = 8x --batch)")
+    ap.add_argument("--tune-oom-above", type=int, default=0,
+                    help="autotune fault injection (CI): probes with "
+                         "batch > this raise a scripted RESOURCE_EXHAUSTED "
+                         "before touching the device, exercising the "
+                         "backoff path without real memory pressure "
+                         "(0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="",
                     help="checkpoint path: final (serving) params are "
@@ -158,6 +186,14 @@ def main(argv=None):
     if args.sharded and args.mesh:
         ap.error("--sharded and --mesh are mutually exclusive (--mesh IS "
                  "a sharded run on an explicit workers,fsdp,model shape)")
+    if (args.autotune or args.tune_plan) and (
+            args.tau_schedule == "qsr" or args.qsr_beta > 0):
+        ap.error("--autotune/--tune-plan pin a fixed tau at the measured "
+                 "comm/compute crossover; --tau-schedule qsr would "
+                 "re-adapt it — drop --qsr-beta when tuning")
+    if args.autotune and not mspec.communicates:
+        ap.error("--autotune searches the communication round's operating "
+                 "point and needs a communicating consensus method")
     mesh_shape = ()
     if args.mesh:
         try:
@@ -206,13 +242,60 @@ def main(argv=None):
     opt = make_optimizer(args.optimizer, momentum=0.9, weight_decay=1e-3)
     key = jax.random.PRNGKey(args.seed)
 
+    # --autotune: search the (batch, tau, overlap_chunks) operating point
+    # on the real round step before committing to a plan; --tune-plan
+    # alone replays a committed TunePlan (DESIGN.md §Autotune)
+    batch_size, tune_plan = args.batch, None
+    if args.autotune:
+        from repro.train import (TuneSpace, inject_oom_above,
+                                 make_lm_model_fn, make_round_probe_runner)
+        from repro.train import autotune as tune
+        space = TuneSpace(min_batch=args.batch,
+                          max_batch=args.max_batch or args.batch * 8,
+                          taus=(args.tau, args.tau * 2), chunks=(1, 2, 4),
+                          probe_budget=args.probe_budget,
+                          overlap=args.overlap, staleness=args.staleness)
+        runner = make_round_probe_runner(
+            model.init, model.loss, opt, dcfg, args.workers,
+            lambda cand: make_round_batch(task, args.seed, args.workers,
+                                          cand.tau, 0, cand.batch, cfg),
+            base_lr=args.lr, total_steps=args.steps, seed=args.seed)
+        if args.tune_oom_above:
+            runner = inject_oom_above(runner, args.tune_oom_above)
+        model_fn = make_lm_model_fn(n_params=n_params, seq=args.seq,
+                                    workers=args.workers,
+                                    overlap=args.overlap,
+                                    staleness=args.staleness)
+        tune_plan = tune(runner, model_fn, space)
+        ch = tune_plan.chosen
+        print(f"autotune: chose batch={ch.batch} tau={ch.tau} "
+              f"chunks={ch.overlap_chunks} after {tune_plan.probes_used} "
+              f"probes (OOM batches: {list(tune_plan.failures) or 'none'}, "
+              f"model scale {tune_plan.residual_scale:.3f})")
+        if args.tune_plan:
+            tune_plan.save(args.tune_plan)
+            print(f"tune plan -> {args.tune_plan}")
+    elif args.tune_plan:
+        from repro.train import TunePlan
+        tune_plan = TunePlan.load(args.tune_plan)
+        ch = tune_plan.chosen
+        print(f"tune plan <- {args.tune_plan}: batch={ch.batch} "
+              f"tau={ch.tau} chunks={ch.overlap_chunks}")
+
     # the RoundClock is the single source of truth for step/round
     # accounting: round plan (incl. the steps % tau remainder, warmup
     # rounds, QSR-adaptive taus — stale-LR ruled under overlap), lam_t,
     # and LR position (DESIGN.md §Round-clock)
-    clock = RoundClock.from_config(dcfg, base_lr=args.lr,
-                                   total_steps=args.steps,
-                                   warmup=args.warmup)
+    if tune_plan is not None:
+        clock = RoundClock.from_tune_plan(tune_plan, base_lr=args.lr,
+                                          total_steps=args.steps,
+                                          warmup=args.warmup, dcfg=dcfg)
+        dcfg = dcfg.apply_tune_plan(tune_plan)
+        batch_size = tune_plan.chosen.batch
+    else:
+        clock = RoundClock.from_config(dcfg, base_lr=args.lr,
+                                       total_steps=args.steps,
+                                       warmup=args.warmup)
     logger = RoundMetricsLogger(args.log_every_round,
                                 legacy=args.legacy_metrics) \
         if args.log_every_round else None
@@ -293,7 +376,7 @@ def main(argv=None):
         # IS the per-tau compiled-step cache)
         for spec in clock.rounds[int(state.round):]:
             batch = make_round_batch(task, args.seed, args.workers, spec.tau,
-                                     spec.start, args.batch, cfg)
+                                     spec.start, batch_size, cfg)
             if drop_spec:
                 w_drop, r_a, r_b = drop_spec
                 mask = jnp.ones((args.workers,), jnp.float32)
@@ -319,7 +402,7 @@ def main(argv=None):
 
     # held-out eval
     eval_batch = make_lm_batch(task, args.seed + 999, 0, 10 ** 6,
-                               args.batch * args.workers, cfg)
+                               batch_size * args.workers, cfg)
     loss, _ = jax.jit(model.loss)(final, eval_batch)
     if logger is not None:
         logger.close()

@@ -1,0 +1,70 @@
+"""Fault-injection fixtures for the autotune test rig (DESIGN.md
+§Autotune).
+
+The OOM contract is message-based (``autotune.is_oom`` token-matches
+``RESOURCE_EXHAUSTED`` / out-of-memory text), so a scripted runner can
+exercise the real backoff path — doubling probes, binary refinement,
+never-retry caching, budget exhaustion — with zero devices and a
+deterministic feasibility frontier. ``scripted_runner`` is that runner;
+``noisy_time_fn`` perturbs a timing oracle with bounded, seed-stable
+multiplicative noise for the property tests (noise must never flip the
+chosen point — selection goes through the calibrated MODEL score).
+"""
+from __future__ import annotations
+
+import hashlib
+
+
+class InjectedOOM(RuntimeError):
+    """A scripted device-memory failure. The message carries the
+    RESOURCE_EXHAUSTED token, which is ALL ``autotune.is_oom`` keys on —
+    the type is deliberately a plain RuntimeError subclass so the tuner
+    cannot cheat by catching a special class."""
+
+    def __init__(self, batch: int):
+        super().__init__(f"RESOURCE_EXHAUSTED: injected OOM at "
+                         f"batch={batch}")
+        self.batch = batch
+
+
+def default_time_fn(cand) -> float:
+    """Smooth deterministic pseudo-round-time in microseconds: a fixed
+    per-round overhead, linear work in batch*tau, and a small chunking
+    overhead — shaped so larger batch and tau amortize better per sample
+    (matching the roofline model's monotonicity)."""
+    return 100.0 + 5.0 * cand.batch * cand.tau + 3.0 / cand.overlap_chunks
+
+
+def scripted_runner(*, fail_above=None, fail_batches=(), time_fn=None,
+                    log=None):
+    """A probe runner with a scripted feasibility frontier: candidates
+    with ``batch > fail_above`` or ``batch in fail_batches`` raise
+    :class:`InjectedOOM`; the rest return ``time_fn(cand)`` microseconds.
+    ``log`` (a list) records every candidate actually RUN — the
+    never-retry tests assert on it."""
+    tf = time_fn or default_time_fn
+
+    def run(cand):
+        if log is not None:
+            log.append(cand)
+        if fail_above is not None and cand.batch > fail_above:
+            raise InjectedOOM(cand.batch)
+        if cand.batch in fail_batches:
+            raise InjectedOOM(cand.batch)
+        return float(tf(cand))
+    return run
+
+
+def noisy_time_fn(base_fn, *, noise=0.05, seed=0):
+    """Wrap a timing oracle with bounded multiplicative noise in
+    ``[1 - noise, 1 + noise]``, deterministic per (seed, candidate) via
+    sha256 — hypothesis property runs stay reproducible without any
+    global RNG state."""
+
+    def tf(cand):
+        h = hashlib.sha256(
+            f"{seed}:{cand.batch}:{cand.tau}:{cand.overlap_chunks}"
+            .encode()).digest()
+        u = int.from_bytes(h[:8], "big") / float(1 << 64)   # [0, 1)
+        return base_fn(cand) * (1.0 + noise * (2.0 * u - 1.0))
+    return tf

@@ -192,6 +192,29 @@ def main():
                                         chunk=1, state_bytes_per_slot=1),
                   "serving_model zero slots")
 
+    # autotune surface (--autotune CI leg runs under -O): the search
+    # space, the qsr/autotune conflict, and the probe roofline all
+    # validate via ValueError, never assert
+    from repro.train.autotune import Candidate, TunePlan, TuneSpace
+    expect_raises(ValueError, lambda: TuneSpace(probe_budget=0),
+                  "TuneSpace probe budget < 1")
+    expect_raises(ValueError, lambda: TuneSpace(min_batch=8, max_batch=4),
+                  "TuneSpace min_batch > max_batch")
+    qsr_plan = TunePlan(chosen=Candidate(batch=4, tau=4, overlap_chunks=1),
+                        probes=(), failures=(), probe_budget=1,
+                        probes_used=1, overlap="doublebuf", staleness=1,
+                        residual_scale=1.0, dominates_model=True,
+                        dominates_measured=True)
+    expect_raises(ValueError,
+                  lambda: DPPFConfig(engine="flat", tau_schedule="qsr",
+                                     qsr_beta=0.4).apply_tune_plan(qsr_plan),
+                  "apply_tune_plan under a qsr schedule")
+    from repro.launch.roofline import probe_round_model
+    expect_raises(ValueError,
+                  lambda: probe_round_model(work_s_per_step=1e-6, tau=4,
+                                            gather_bytes=1e6, mode="bogus"),
+                  "probe_round_model unknown overlap mode")
+
     import tempfile, os
     from repro.checkpoint import load_pytree, save_pytree
     with tempfile.TemporaryDirectory() as d:

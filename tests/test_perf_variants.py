@@ -71,3 +71,71 @@ def test_bf16_momentum_still_descends():
         g = jax.grad(lambda q: 0.5 * jnp.sum(q["x"] ** 2))(p)
         p, st = opt.step(p, g, st, 0.05)
     assert float(jnp.abs(p["x"]).max()) < 0.25
+
+
+def test_staleness_k_elastic_under_tuned_plan():
+    """Perf-variant combo under an autotuned operating point: a TunePlan
+    searched over the staleness-k space (scripted OOM frontier, no
+    devices) drives BOTH the plain and the elastic staleness-k trainers.
+    Full participation must not perturb elastic vs plain — the bounded
+    -async carry is free when nobody drops — and a dropped round must
+    actually change the dropped row (the mask is live, not decorative)."""
+    from _faults import default_time_fn, scripted_runner
+    from repro.configs import DPPFConfig
+    from repro.optim import make_optimizer
+    from repro.train import (
+        TuneSpace, autotune, init_train_state, make_round_step,
+        set_participation,
+    )
+    from benchmarks.common import mlp_init, mlp_loss
+
+    space = TuneSpace(min_batch=1, max_batch=8, taus=(2, 4), chunks=(1, 2),
+                      probe_budget=16, overlap="staleness_k", staleness=2)
+    plan = autotune(scripted_runner(fail_above=5), default_time_fn, space)
+    assert plan.chosen.batch == 5 and plan.overlap == "staleness_k"
+
+    M, dim, ncls = 4, 16, 4
+    base = DPPFConfig(alpha=0.2, lam=0.4, engine="flat",
+                      overlap="staleness_k", staleness=2,
+                      lam_schedule="fixed")
+    dcfg_p = base.apply_tune_plan(plan)
+    dcfg_e = dataclasses.replace(base, elastic=True).apply_tune_plan(plan)
+    assert dcfg_p.tau == plan.chosen.tau
+    assert dcfg_p.overlap_chunks == plan.chosen.overlap_chunks
+    assert dcfg_e.elastic and dcfg_e.staleness == 2
+
+    opt = make_optimizer("sgd", momentum=0.9)
+    p0 = lambda k: mlp_init(k, dim, ncls, 8)
+
+    def batches(seed):
+        k = jax.random.PRNGKey(seed)
+        shape = (plan.chosen.tau, M, plan.chosen.batch)
+        return {"x": jax.random.normal(k, shape + (dim,)),
+                "y": jax.random.randint(jax.random.fold_in(k, 1),
+                                        shape, 0, ncls)}
+
+    st_p = init_train_state(p0, opt, dcfg_p, M, jax.random.PRNGKey(0))
+    st_e = init_train_state(p0, opt, dcfg_e, M, jax.random.PRNGKey(0))
+    step_p = jax.jit(make_round_step(mlp_loss, opt, dcfg_p, base_lr=0.05,
+                                     total_steps=40))
+    step_e = jax.jit(make_round_step(mlp_loss, opt, dcfg_e, base_lr=0.05,
+                                     total_steps=40))
+    for r in range(4):
+        st_e = set_participation(st_e, jnp.ones((M,)))
+        st_p, m_p = step_p(st_p, batches(r))
+        st_e, m_e = step_e(st_e, batches(r))
+    np.testing.assert_array_equal(np.asarray(st_p.params),
+                                  np.asarray(st_e.params))
+    assert float(m_p["train_loss"]) == float(m_e["train_loss"])
+
+    # a dropped round diverges: the dropped row freezes in the elastic
+    # run while the plain run keeps training it
+    mask = np.ones(M, np.float32)
+    mask[2] = 0.0
+    st_e = set_participation(st_e, jnp.asarray(mask))
+    st_p, _ = step_p(st_p, batches(7))
+    st_e, _ = step_e(st_e, batches(7))
+    row_p = np.asarray(st_p.engine.workers(st_p.params)[2])
+    row_e = np.asarray(st_e.engine.workers(st_e.params)[2])
+    assert np.abs(row_p - row_e).max() > 0.0
+    assert np.isfinite(np.asarray(st_e.params)).all()
