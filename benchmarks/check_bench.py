@@ -1,6 +1,7 @@
 """Compare freshly generated bench JSONs (``BENCH_roundclock.json``,
-``BENCH_overlap.json``, ``BENCH_serving.json``, ``BENCH_autotune.json``)
-against their committed baselines (ROADMAP bench-tracking item).
+``BENCH_overlap.json``, ``BENCH_serving.json``, ``BENCH_autotune.json``,
+``BENCH_chaos.json``) against their committed baselines (ROADMAP
+bench-tracking item).
 
 Two classes of fields:
 
@@ -29,6 +30,16 @@ through the calibrated roofline model — a host-independent argmin), and
 ``residual_scale`` (the measured/modeled calibration), its
 ``max_abs_log_residual``, and ``dominates_measured`` are host-relative
 timing fields.
+
+The chaos baseline (``BENCH_chaos.json``) pins the fault-tolerant
+supervisor's STRUCTURAL surface: the committed ChaosPlan, the recovery
+counters and the full pinned ``event_seq`` (every suspect/evict/rejoin/
+degrade/oom/shrink/restore/retry in emission order — replays are
+bit-identical by contract), ``final_batch``, the determinism/parity
+gates (``replay_identical``, ``empty_plan_parity``, ``schedule_parity``,
+``completed``), the deterministic ``backoff_recorded_s`` (sha256 jitter,
+never slept), and the ``modeled`` degraded-round roofline block; only
+``wall_s`` rides the timing keys.
 
 The ``method_zoo`` key (also in ``BENCH_overlap.json``) is registry
 driven: its ``method_names`` list and per-method dict KEYS are structural

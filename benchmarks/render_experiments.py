@@ -402,6 +402,70 @@ def autotune_section():
     return "\n".join(out)
 
 
+def chaos_section():
+    """Render the committed ``BENCH_chaos.json``: the fault-tolerant
+    round supervisor under a scripted ChaosPlan — recovery-event
+    timeline, determinism/parity gates, and the degraded-round roofline
+    accounting."""
+    path = os.path.join(ROOT, "BENCH_chaos.json")
+    if not os.path.exists(path):
+        return ("*(`BENCH_chaos.json` not committed yet — run "
+                "`PYTHONPATH=src:. python benchmarks/bench_chaos.py "
+                "--smoke` and commit it.)*")
+    with open(path) as f:
+        bench = json.load(f)
+    c = bench["chaos"]
+    gates = ", ".join(f"`{k}`={c[k]}" for k in (
+        "replay_identical", "empty_plan_parity", "schedule_parity",
+        "completed"))
+    counters = ", ".join(f"{k}={v}" for k, v in sorted(
+        c["counters"].items()))
+    m = c["modeled"]
+    out = [
+        "The round supervisor (`train/supervisor.py`) owns the host-side "
+        "round loop: a heartbeat membership table (ACTIVE -> SUSPECT -> "
+        "DEAD -> REJOINING) drives the participation mask, below-quorum "
+        "rounds degrade to local-only steps via the elastic carry's "
+        "scalar `sync` gate (a bit-exact consensus skip, backed off with "
+        "deterministic jitter), and failed rounds restore the "
+        "`sup_last`/`sup_prev` rotation checkpoint and replay — OOMs "
+        "shrink the per-worker batch first (the PR 9 `is_oom` contract). "
+        "Faults come from a replayable `ChaosPlan` (the TunePlan JSON "
+        "idiom), so the recovery-event sequence below is a committed "
+        "contract, not a flaky observation (DESIGN.md §Fault-tolerance).",
+        "",
+        f"Committed baseline: `BENCH_chaos.json` — {c['workers']} workers "
+        f"x {c['rounds']} rounds (tau {c['tau']}, staleness "
+        f"{c['staleness']}, quorum {c['quorum']}), plan seed "
+        f"{c['plan']['seed']} with {len(c['plan']['events'])} scripted "
+        f"faults. Structural gates: {gates}. Per-worker batch "
+        f"{c['batch']} -> {c['final_batch']} after the injected "
+        f"RESOURCE_EXHAUSTED. Counters: {counters}.",
+        "",
+        "| round | recovery event |",
+        "|---|---|",
+    ]
+    for ev in c["event_seq"]:
+        rnd, rest = ev.split(":", 1)
+        out.append(f"| {rnd[1:]} | `{rest}` |")
+    out += [
+        "",
+        f"Modeled degraded-round accounting (`launch/roofline.py::"
+        f"supervisor_model`, pure arithmetic): fault-free "
+        f"{m['fault_free_s']}s vs faulted {m['faulted_s']}s "
+        f"(+{100 * m['overhead_frac']:.1f}%) — each retried round "
+        f"re-executes in full ({m['retry_s']}s) plus the checkpoint "
+        f"restore stream ({m['restore_s']}s at DISK_BW), while degraded "
+        f"rounds SAVE whatever ring-gather tail the k-deep carry could "
+        f"not hide ({m['degraded_saved_s']}s here). Backoff is recorded "
+        f"in the events ({c['backoff_recorded_s']}s total) but not slept "
+        f"— the bench runs on virtual time. `wall_s` is host-relative "
+        f"timing; everything above is structural "
+        f"(`benchmarks/check_bench.py`).",
+    ]
+    return "\n".join(out)
+
+
 MISSING_DRYRUN = (
     "*(dry-run records not present — populate `results/dryrun/` with "
     "`PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both` "
@@ -508,6 +572,10 @@ def render() -> str:
         "## Autotune — searched operating point (`--autotune`)",
         "",
         autotune_section(),
+        "",
+        "## Chaos — fault-tolerant round supervisor (`--chaos`)",
+        "",
+        chaos_section(),
         "",
         "## Hierarchical-mesh comparison",
         "",

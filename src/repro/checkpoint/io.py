@@ -15,11 +15,27 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import tempfile
+import zipfile
+import zlib
 
 import jax
 import numpy as np
 
 _SEP = "::"
+
+# exception types a truncated / torn / garbled npz archive surfaces as;
+# load_pytree converts them into one clear ValueError naming the path (the
+# contract the supervisor's restore ladder relies on — a corrupt "last"
+# checkpoint must be a recoverable condition, not a raw zip traceback)
+_CORRUPT_ERRORS = (zipfile.BadZipFile, EOFError, OSError, zlib.error,
+                   ValueError, KeyError)
+
+
+def _corrupt(path, err):
+    return ValueError(
+        f"checkpoint {path!r} is truncated or corrupt "
+        f"({type(err).__name__}: {err}) — restore from an older copy")
 
 
 def _flatten(tree):
@@ -32,24 +48,62 @@ def _flatten(tree):
 
 
 def save_pytree(path, tree, extra=None):
+    """Crash-safe save: the archive is written to a same-directory temp
+    file and ``os.replace``d into place, so a crash mid-save can never
+    leave a torn ``.npz`` under the final name — the previous checkpoint
+    (if any) survives intact until the new one is fully on disk."""
     flat = _flatten(tree)
     if extra:
         for k, v in extra.items():
             flat[f"__extra__{_SEP}{k}"] = np.asarray(v)
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **flat)
+    final = path if path.endswith(".npz") else path + ".npz"
+    d = os.path.dirname(os.path.abspath(final)) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(final) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(tmp, final)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
 
 
 def load_pytree(path, like):
-    """Restore into the structure of ``like`` (shape/dtype template)."""
-    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    """Restore into the structure of ``like`` (shape/dtype template).
+
+    A truncated or garbled archive (torn write, injected corruption)
+    raises ``ValueError`` naming the path — never a raw ``BadZipFile`` /
+    EOF traceback — so callers like the supervisor's restore ladder can
+    fall back to an older checkpoint. A missing file still raises
+    ``FileNotFoundError``."""
+    file = path if path.endswith(".npz") else path + ".npz"
+    try:
+        data = np.load(file)
+    except FileNotFoundError:
+        raise
+    except _CORRUPT_ERRORS as e:
+        raise _corrupt(file, e) from e
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     paths = jax.tree_util.tree_flatten_with_path(like)[0]
     out = []
+    try:
+        files = set(data.files)
+    except _CORRUPT_ERRORS as e:
+        raise _corrupt(file, e) from e
     for (path_keys, leaf) in paths:
         key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
                         for p in path_keys)
-        arr = data[key]
+        if key not in files:
+            raise ValueError(
+                f"checkpoint {file!r} has no leaf {key!r} (template "
+                "mismatch or truncated archive)")
+        try:
+            arr = data[key]
+        except _CORRUPT_ERRORS as e:
+            raise _corrupt(file, e) from e
         if arr.shape != tuple(leaf.shape):
             # ValueError, not assert: restore is a user-facing path and the
             # shape check must survive python -O
@@ -57,8 +111,11 @@ def load_pytree(path, like):
                 f"checkpoint leaf {key!r} has shape {arr.shape}, template "
                 f"expects {tuple(leaf.shape)}")
         out.append(arr.astype(leaf.dtype))
-    extra = {k.split(_SEP, 1)[1]: data[k] for k in data.files
-             if k.startswith("__extra__")}
+    try:
+        extra = {k.split(_SEP, 1)[1]: data[k] for k in files
+                 if k.startswith("__extra__")}
+    except _CORRUPT_ERRORS as e:
+        raise _corrupt(file, e) from e
     return jax.tree_util.tree_unflatten(treedef, out), extra
 
 
@@ -105,8 +162,13 @@ def load_train_state(path, like, *, shardings=None, clock=None):
     the resumed ``TrainState``.
     """
     file = path if path.endswith(".npz") else path + ".npz"
-    with np.load(file) as data:
-        keys = set(data.files)
+    try:
+        with np.load(file) as data:
+            keys = set(data.files)
+    except FileNotFoundError:
+        raise
+    except _CORRUPT_ERRORS as e:
+        raise _corrupt(file, e) from e
     if f"__extra__{_SEP}t" not in keys:
         raise ValueError(
             f"{path} is not a train-state checkpoint (no step counter) — "
@@ -116,7 +178,18 @@ def load_train_state(path, like, *, shardings=None, clock=None):
         k.startswith(f"snap{_SEP}") for k in keys)
     if missing_snap:
         del template["snap"]
+    # elastic checkpoints written before the quorum sync gate existed have
+    # no snap::sync scalar — drop it from the template and backfill the
+    # fully-synced default after the load (graceful format upgrade)
+    fill_sync = (not missing_snap and "snap" in template
+                 and "sync" in template["snap"]
+                 and f"snap{_SEP}sync" not in keys)
+    if fill_sync:
+        template["snap"] = {k: v for k, v in template["snap"].items()
+                            if k != "sync"}
     tree, extra = load_pytree(path, template)
+    if fill_sync:
+        tree["snap"] = dict(tree["snap"], sync=np.ones((), np.float32))
     if missing_snap:
         sx = tree["params"] + 0.0
         if like.snap["x"].ndim == sx.ndim + 1:

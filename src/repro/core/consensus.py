@@ -182,6 +182,23 @@ def _apply_round_tree(stacked, dcfg, lam_t, state, *, losses, grad_norms,
 # Flat path: generic MethodSpec -> (target-weights, c0, c1) stage lowering
 # ---------------------------------------------------------------------------
 
+def as_participation_mask(mask, n_workers):
+    """The membership-provider contract: canonicalize a provider's output
+    (heartbeat table, chaos schedule, ``--elastic-drop`` window — anything
+    that decides per-round who is in) to the ``(n_workers,)`` float32
+    participation vector the masked lowering consumes: entry m is 1.0 when
+    worker row m takes part in this round's consensus, 0.0 when it is out.
+    Raises ``ValueError`` (never assert — survives ``python -O``) on a
+    wrong shape, so a provider bug fails loudly at the boundary instead of
+    broadcasting into the mixing stages."""
+    act = jnp.asarray(mask, jnp.float32)
+    if act.ndim != 1 or act.shape[0] != int(n_workers):
+        raise ValueError(
+            f"participation mask shape {act.shape} != ({int(n_workers)},) "
+            "(one entry per worker row)")
+    return act
+
+
 def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
                  push_from="average", mask=None, pull_scale=1.0):
     """Lower a consensus method's ``MethodSpec`` to its flat-engine stages.
@@ -227,13 +244,17 @@ def lower_stages(engine, dcfg, lam_t, *, losses=None, grad_norms=None,
     zeros = jnp.zeros((R,), jnp.float32)
     act = gate = None
     if mask is not None:
-        act = jnp.asarray(mask, jnp.float32)             # (M,) 1 = active
+        act = as_participation_mask(mask, M)             # (M,) 1 = active
         mfull = zeros.at[:M].set(act)
         # masked uniform: the worker mean over active rows only
         u = mfull / jnp.maximum(jnp.sum(mfull), 1.0)
         # coefficient gate: inactive worker rows get zero pull/push; aux
-        # rows always participate (the elastic center keeps tracking)
-        gate = jnp.ones((R,), jnp.float32).at[:M].set(act)
+        # rows participate while ANY worker row is active (the elastic
+        # center keeps tracking the live fleet) but freeze with the fleet
+        # when everyone is out — an all-zero mask must make every mixing
+        # stage a bit-exact pass-through, not shrink the center toward 0
+        aux_on = (jnp.sum(act) > 0).astype(jnp.float32)
+        gate = (aux_on * jnp.ones((R,), jnp.float32)).at[:M].set(act)
 
     def worker_T(w):
         """All worker rows target the combination w; aux rows stay put."""

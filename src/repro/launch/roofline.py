@@ -476,6 +476,75 @@ def serving_model(cfg, *, max_slots: int, chunk: int,
     }
 
 
+DISK_BW = 1.2e9  # checkpoint restore stream (NVMe-class sequential read)
+
+
+def supervisor_model(*, rounds: int, tau: int, work_s_per_step: float,
+                     gather_bytes: float, R: int = 8, staleness: int = 1,
+                     degraded_rounds: int = 0, retried_rounds: int = 0,
+                     restores: int = 0, restore_bytes: float = 0.0,
+                     backoff_s: float = 0.0):
+    """Fault-timeline accounting for the round supervisor
+    (``train/supervisor.py``), priced with the same ``probe_round_model``
+    formula set the autotuner and microbench use.
+
+    A healthy staleness-k round costs ``round_s`` (tau local steps plus
+    whatever ring-gather tail the k-deep carry could not hide). The
+    supervisor's recovery actions then perturb the timeline three ways:
+
+    * a DEGRADED round (below quorum, ``sync=0``) skips the consensus
+      application, so its boundary never waits on the ring tail — it
+      costs only the ``tau * work_s_per_step`` local window and SAVES
+      ``round_s - local_s`` against the healthy price;
+    * a RETRIED round (failed step, restored, replayed) re-executes in
+      full — one extra ``round_s`` each, plus the restore's checkpoint
+      read (``restore_bytes / DISK_BW`` per restore);
+    * deterministic backoff sleeps add straight wall time (``backoff_s``
+      totals them; CI runs on virtual time and passes 0).
+
+    Returns fault-free vs faulted wall seconds and the net overhead
+    fraction. Pure arithmetic — structural for check_bench; all guards
+    ValueError (python -O)."""
+    if rounds < 1:
+        raise ValueError(f"rounds must be >= 1, got {rounds}")
+    if not 0 <= degraded_rounds <= rounds:
+        raise ValueError(
+            f"degraded_rounds must be in [0, rounds], got "
+            f"{degraded_rounds} of {rounds}")
+    if retried_rounds < 0 or restores < 0:
+        raise ValueError(
+            f"retried_rounds ({retried_rounds}) and restores ({restores}) "
+            "must be >= 0")
+    if restore_bytes < 0 or backoff_s < 0:
+        raise ValueError(
+            f"restore_bytes ({restore_bytes}) and backoff_s ({backoff_s}) "
+            "must be >= 0")
+    round_s = probe_round_model(
+        work_s_per_step=work_s_per_step, tau=tau,
+        gather_bytes=gather_bytes, R=R, mode="staleness_k",
+        staleness=staleness)
+    local_s = work_s_per_step * tau
+    fault_free_s = rounds * round_s
+    degraded_saved_s = degraded_rounds * (round_s - local_s)
+    restore_s = restores * (float(restore_bytes) / DISK_BW)
+    retry_s = retried_rounds * round_s
+    faulted_s = (fault_free_s - degraded_saved_s + retry_s + restore_s
+                 + float(backoff_s))
+    out = {
+        "round_s": round_s,
+        "local_s": local_s,
+        "fault_free_s": fault_free_s,
+        "degraded_saved_s": degraded_saved_s,
+        "retry_s": retry_s,
+        "restore_s": restore_s,
+        "backoff_s": float(backoff_s),
+        "faulted_s": faulted_s,
+        "overhead_frac": (faulted_s / fault_free_s - 1.0
+                          if fault_free_s > 0 else 0.0),
+    }
+    return {k: round(v, 6) for k, v in out.items()}
+
+
 # retained for backward compatibility with simple parsing callers
 def collective_bytes(hlo_text: str):
     return analyze_hlo(hlo_text)["collectives"]

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import argparse
 import os
+import tempfile
 import time
 
 import jax
@@ -22,8 +23,9 @@ from repro.data import TokenTask, make_lm_batch, make_round_batch
 from repro.models import build_model
 from repro.optim import make_optimizer
 from repro.train import (
-    RoundClock, init_train_state, make_ddp_step, make_round_step,
-    make_sharded_round_step, set_participation, shard_train_state,
+    ChaosMembership, ChaosPlan, FaultInjector, RoundClock,
+    ScheduleMembership, Supervisor, init_train_state, make_ddp_step,
+    make_round_step, make_sharded_round_step, shard_train_state,
 )
 from repro.train.clock import RoundMetricsLogger
 from repro.train.trainer import TrainState, average_params
@@ -97,7 +99,37 @@ def main(argv=None):
                     help="elastic demo: mark worker row W inactive for "
                          "rounds [A, B) via train.set_participation (the "
                          "bounded-staleness clamp still forces a rejoin "
-                         "after k missed rounds)")
+                         "after k missed rounds); runs through the same "
+                         "supervisor loop as --chaos, as the trivial "
+                         "ScheduleMembership provider")
+    ap.add_argument("--chaos", default="", metavar="PLAN.json",
+                    help="run under the fault-tolerant supervisor with a "
+                         "replayable ChaosPlan (train.chaos): scripted "
+                         "kill/stall/netdrop windows drive the heartbeat "
+                         "membership table, oom events raise "
+                         "RESOURCE_EXHAUSTED at the trainer boundary "
+                         "(batch shrinks and the round replays from the "
+                         "last good checkpoint), corrupt_ckpt events tear "
+                         "a written checkpoint (the restore ladder falls "
+                         "back to the previous rotation copy). The same "
+                         "plan replays to a bit-identical recovery-event "
+                         "sequence")
+    ap.add_argument("--quorum", type=int, default=0,
+                    help="minimum active worker rows for a consensus "
+                         "round; below it the round degrades to local-"
+                         "only steps (consensus skipped bit-exactly, "
+                         "logged, backed off). 0 = disabled; requires a "
+                         "membership source (--chaos or --elastic-drop)")
+    ap.add_argument("--heartbeat-timeout", type=float, default=0.9,
+                    help="seconds of heartbeat silence before a "
+                         "membership poll counts a missed deadline (the "
+                         "chaos clock is virtual: one round = 1s, so the "
+                         "default suspects a worker on its first fully "
+                         "silent round); must be > 0")
+    ap.add_argument("--retry-budget", type=int, default=3,
+                    help="supervisor: max CONSECUTIVE failed rounds "
+                         "(restore + replay each) before the failure "
+                         "propagates")
     ap.add_argument("--sharded", action="store_true",
                     help="run the round under shard_map on all local "
                          "devices (launch.mesh.make_flat_engine_mesh; "
@@ -203,6 +235,51 @@ def main(argv=None):
         except ValueError:
             ap.error("--mesh expects three comma-separated ints: "
                      "workers,fsdp,model (e.g. --mesh 2,2,2)")
+    # supervisor / membership flag validation — all before any model work
+    drop_spec = ()
+    if args.elastic_drop:
+        try:
+            drop_spec = tuple(int(x) for x in args.elastic_drop.split(","))
+            if len(drop_spec) != 3 or not 0 <= drop_spec[0] < args.workers:
+                raise ValueError
+        except ValueError:
+            ap.error("--elastic-drop expects W,A,B with worker row "
+                     "0 <= W < --workers (e.g. --elastic-drop 2,3,5)")
+        if not 0 <= drop_spec[1] < drop_spec[2]:
+            ap.error(f"--elastic-drop window [{drop_spec[1]}, "
+                     f"{drop_spec[2]}) is empty or negative — need "
+                     "0 <= A < B (e.g. --elastic-drop 2,3,5)")
+    if args.chaos and drop_spec:
+        ap.error("--chaos and --elastic-drop are mutually exclusive (the "
+                 "plan's kill/stall/netdrop events already script the "
+                 "membership windows)")
+    if args.heartbeat_timeout <= 0:
+        ap.error("--heartbeat-timeout must be > 0 seconds")
+    if args.retry_budget < 0:
+        ap.error("--retry-budget must be >= 0")
+    if not 0 <= args.quorum <= args.workers:
+        ap.error(f"--quorum {args.quorum} must be in [0, --workers] "
+                 f"({args.workers})")
+    chaos_plan = None
+    if args.chaos:
+        try:
+            chaos_plan = ChaosPlan.load(args.chaos)
+        except ValueError as e:
+            ap.error(f"--chaos {args.chaos}: {e}")
+    if args.quorum and chaos_plan is None and not drop_spec:
+        ap.error("--quorum needs a membership source: a --chaos plan or "
+                 "an --elastic-drop window")
+    needs_membership = bool(drop_spec) or args.quorum > 0 or (
+        chaos_plan is not None and bool(chaos_plan.membership_events()))
+    if needs_membership and args.overlap != "staleness_k":
+        ap.error("membership-driven rounds (--elastic-drop / --quorum / "
+                 "a --chaos plan with kill|stall|netdrop events) ride the "
+                 "elastic staleness_k carry — add --overlap staleness_k "
+                 "(with --staleness K)")
+    if needs_membership and not mspec.communicates:
+        ap.error("membership/quorum supervision needs a communicating "
+                 "consensus method (a local-only method never syncs, so "
+                 "there is nothing to degrade or rejoin)")
 
     cfg = get_arch(args.arch)
     if args.smoke:
@@ -226,19 +303,10 @@ def main(argv=None):
                       overlap=args.overlap,
                       overlap_chunks=args.overlap_chunks,
                       staleness=args.staleness,
-                      elastic=args.elastic or bool(args.elastic_drop),
+                      elastic=args.elastic or needs_membership,
                       elastic_catchup=args.elastic_catchup,
                       lam_schedule=args.lam_schedule,
                       tau_schedule=args.tau_schedule, qsr_beta=args.qsr_beta)
-    drop_spec = ()
-    if args.elastic_drop:
-        try:
-            drop_spec = tuple(int(x) for x in args.elastic_drop.split(","))
-            if len(drop_spec) != 3 or not 0 <= drop_spec[0] < args.workers:
-                raise ValueError
-        except ValueError:
-            ap.error("--elastic-drop expects W,A,B with worker row "
-                     "0 <= W < --workers (e.g. --elastic-drop 2,3,5)")
     opt = make_optimizer(args.optimizer, momentum=0.9, weight_decay=1e-3)
     key = jax.random.PRNGKey(args.seed)
 
@@ -322,7 +390,7 @@ def main(argv=None):
         state = init_train_state(model.init, opt, dcfg, args.workers, key)
         # the resume point lives NEXT TO the final-params checkpoint (which
         # keeps its serving format at args.ckpt, see launch/serve.py)
-        state_file = ""
+        state_file = stem = ""
         if args.ckpt:
             stem = args.ckpt[:-4] if args.ckpt.endswith(".npz") else args.ckpt
             state_file = stem + ".state.npz"
@@ -369,29 +437,61 @@ def main(argv=None):
                                            clock=clock,
                                            sam_rho=args.sam_rho),
                            donate_argnums=0)
-        # iterate the clock's round plan: every step runs (the remainder
-        # round is part of the plan, no longer dropped), batches are cut to
-        # each round's tau and seeded by its global start step, and a QSR
-        # tau change simply retraces under jit (the shape-keyed jit cache
-        # IS the per-tau compiled-step cache)
-        for spec in clock.rounds[int(state.round):]:
-            batch = make_round_batch(task, args.seed, args.workers, spec.tau,
-                                     spec.start, batch_size, cfg)
-            if drop_spec:
-                w_drop, r_a, r_b = drop_spec
-                mask = jnp.ones((args.workers,), jnp.float32)
-                if r_a <= spec.index < r_b:
-                    mask = mask.at[w_drop].set(0.0)
-                state = set_participation(state, mask)
-            state, m = step(state, batch)
-            if logger is not None:
-                logger(spec, m)
+        # the fault-tolerant supervisor owns the round iteration
+        # (train/supervisor.py): it iterates the clock's round plan (every
+        # step runs — the remainder round is part of the plan; a QSR tau
+        # change simply retraces under jit), polls membership into the
+        # participation mask, degrades below-quorum rounds to local-only
+        # steps, and recovers failed rounds from rotation checkpoints.
+        # With no membership and no chaos it is bit-for-bit the plain
+        # `for spec in clock.rounds` loop this replaced.
+        membership = injector = None
+        if chaos_plan is not None:
+            injector = FaultInjector(chaos_plan)
+            if needs_membership:
+                membership = ChaosMembership(chaos_plan, args.workers,
+                                             timeout=args.heartbeat_timeout)
+        elif drop_spec:
+            membership = ScheduleMembership(args.workers, [drop_spec])
+        sup_dir = ""
+        if chaos_plan is not None:
+            # recovery checkpoints (the sup_last/sup_prev rotation pair)
+            # live next to the resume point when --ckpt names one, else
+            # in a scratch dir for this run only
+            sup_dir = stem + ".sup" if stem \
+                else tempfile.mkdtemp(prefix="dppf-sup-")
+        place_fn = None
+        if args.sharded or mesh_shape:
+            place_fn = (lambda st:
+                        shard_train_state(st, mesh, plan, dcfg=dcfg))
+
+        def on_round(spec, m):
             if spec.index % args.log_every == 0:
-                print(f"round {spec.index:4d} (step {int(state.t):5d} "
+                # state.t after the step == spec.start + spec.tau
+                print(f"round {spec.index:4d} "
+                      f"(step {spec.start + spec.tau:5d} "
                       f"tau {spec.tau:3d}) "
                       f"loss {float(m['train_loss']):.4f} "
                       f"consensus_dist {float(m['consensus_dist']):.3f} "
                       f"lam_t {float(m.get('lam_t', 0)):.3f}")
+
+        sup = Supervisor(clock, workers=args.workers, membership=membership,
+                         quorum=args.quorum, retry_budget=args.retry_budget,
+                         chaos=injector, ckpt_dir=sup_dir,
+                         tune_plan=tune_plan, batch_size=batch_size,
+                         logger=logger, on_round=on_round,
+                         place_fn=place_fn, seed=args.seed)
+        state = sup.run(
+            state, step,
+            lambda spec, bs: make_round_batch(task, args.seed, args.workers,
+                                              spec.tau, spec.start, bs, cfg),
+            start_round=int(state.round))
+        if sup.events:
+            s = sup.summary()
+            print("supervisor events: " + " ".join(s["event_seq"]))
+            print("supervisor counters: " + " ".join(
+                f"{k}={v}" for k, v in s["counters"].items())
+                  + f" final_batch={s['final_batch']}")
         print(f"comm rounds {clock.total_rounds} "
               f"(fixed tau={args.tau} would take {clock.fixed_rounds}; "
               f"all-reduces saved {clock.fixed_rounds - clock.total_rounds})")

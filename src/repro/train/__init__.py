@@ -2,8 +2,14 @@ from repro.train.autotune import (
     Candidate, ProbeResult, TunePlan, TuneSpace, autotune, inject_oom_above,
     is_oom, make_lm_model_fn, make_round_probe_runner,
 )
+from repro.train.chaos import (
+    ChaosEvent, ChaosPlan, FaultInjector, InjectedOOM,
+)
 from repro.train.clock import (
     OVERLAP_MODES, TAU_SCHEDULES, RoundClock, RoundMetricsLogger, RoundSpec,
+)
+from repro.train.supervisor import (
+    ChaosMembership, HeartbeatMembership, ScheduleMembership, Supervisor,
 )
 from repro.train.trainer import (
     TrainState, average_params, init_train_state, make_ddp_step,
@@ -11,10 +17,13 @@ from repro.train.trainer import (
     shard_train_state, stacked_params,
 )
 
-__all__ = ["Candidate", "OVERLAP_MODES", "ProbeResult", "TAU_SCHEDULES",
-           "RoundClock", "RoundMetricsLogger", "RoundSpec", "TrainState",
-           "TunePlan", "TuneSpace", "autotune", "average_params",
-           "init_train_state", "inject_oom_above", "is_oom",
-           "make_ddp_step", "make_lm_model_fn", "make_round_probe_runner",
-           "make_round_step", "make_sharded_round_step",
-           "set_participation", "shard_train_state", "stacked_params"]
+__all__ = ["Candidate", "ChaosEvent", "ChaosMembership", "ChaosPlan",
+           "FaultInjector", "HeartbeatMembership", "InjectedOOM",
+           "OVERLAP_MODES", "ProbeResult", "TAU_SCHEDULES", "RoundClock",
+           "RoundMetricsLogger", "RoundSpec", "ScheduleMembership",
+           "Supervisor", "TrainState", "TunePlan", "TuneSpace", "autotune",
+           "average_params", "init_train_state", "inject_oom_above",
+           "is_oom", "make_ddp_step", "make_lm_model_fn",
+           "make_round_probe_runner", "make_round_step",
+           "make_sharded_round_step", "set_participation",
+           "shard_train_state", "stacked_params"]

@@ -202,10 +202,14 @@ def init_train_state(loss_params_init, opt: Optimizer, dcfg: DPPFConfig,
                     "losses": jnp.zeros((k, n_workers), jnp.float32),
                     "gns": jnp.ones((k, n_workers), jnp.float32)}
             if dcfg.elastic:
+                # sync is the scalar quorum gate (train/supervisor.py):
+                # 1 = normal round, 0 = quorum-degraded — local steps run
+                # but the consensus application is skipped bit-exactly
                 snap.update(
                     act=jnp.ones((k, n_workers), jnp.float32),
                     active=jnp.ones((n_workers,), jnp.float32),
-                    missed=jnp.zeros((n_workers,), jnp.int32))
+                    missed=jnp.zeros((n_workers,), jnp.int32),
+                    sync=jnp.ones((), jnp.float32))
         elif overlap_mode != "none":
             # round-0 snapshot: the (degenerate) init fleet. staleness1
             # gates the first delta off (explicit pipeline bubble, round 0
@@ -237,7 +241,8 @@ def _row_select(active, new, old):
     return jnp.where(cond, new, old)
 
 
-def set_participation(state: TrainState, active) -> TrainState:
+def set_participation(state: TrainState, active, *,
+                      sync=None) -> TrainState:
     """Host-side elastic-membership hook: set which worker rows take part
     in the NEXT rounds (1 = active, 0 = dropped). The mask rides the
     snapshot carry; a dropped row freezes (its local steps revert, its
@@ -245,17 +250,28 @@ def set_participation(state: TrainState, active) -> TrainState:
     weights) until it is re-activated here — or until it has missed
     ``dcfg.staleness`` consecutive rounds, when the bounded-staleness rule
     forces it back in. Requires an elastic staleness_k state
-    (``DPPFConfig.elastic=True``)."""
+    (``DPPFConfig.elastic=True``).
+
+    ``sync`` (the supervisor's quorum gate) sets the scalar degrade flag:
+    0.0 makes the next round local-only — the scan runs but the consensus
+    application (stale delta, catch-up pull, center move) is skipped
+    bit-exactly; 1.0 restores normal rounds. ``None`` leaves the carried
+    flag untouched (the pre-supervisor call signature)."""
     if state.snap is None or "active" not in state.snap:
         raise ValueError(
             "set_participation requires an elastic staleness_k TrainState "
             "(DPPFConfig.overlap='staleness_k', elastic=True)")
-    act = jnp.asarray(active, jnp.float32)
-    if act.shape != state.snap["active"].shape:
-        raise ValueError(
-            f"participation mask shape {act.shape} != "
-            f"{state.snap['active'].shape} (one entry per worker row)")
-    return dataclasses.replace(state, snap=dict(state.snap, active=act))
+    act = consensus.as_participation_mask(
+        active, state.snap["active"].shape[0])
+    new_snap = dict(state.snap, active=act)
+    if sync is not None:
+        if "sync" not in state.snap:
+            raise ValueError(
+                "sync gating requires a state whose elastic carry has the "
+                "sync scalar (init_train_state adds it; legacy restored "
+                "states are backfilled by load_train_state)")
+        new_snap["sync"] = jnp.asarray(sync, jnp.float32).reshape(())
+    return dataclasses.replace(state, snap=new_snap)
 
 
 def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
@@ -458,6 +474,15 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                 w = w + (dcfg.elastic_catchup * rejoin)[:, None] \
                     * (mean[None] - w)
                 params = engine.with_workers(params, w)
+                if "sync" in snap:
+                    # quorum-degrade gate (train/supervisor.py): sync == 0
+                    # reverts the whole consensus application — stale
+                    # delta, catch-up pull, and the aux-center move —
+                    # leaving every row at its post-freeze local view q
+                    # BIT-exactly (a where select, never arithmetic
+                    # blending); the ring still advances below so the
+                    # pipeline stays resume-correct
+                    params = jnp.where(snap["sync"] > 0, params, q)
             # advance the ring: drop the consumed slot, append fresh q
             new_snap = {
                 "x": jnp.concatenate([snap["x"][1:], q[None]], axis=0),
@@ -472,6 +497,8 @@ def make_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                     active=active,
                     missed=jnp.where(eff > 0, 0, missed + 1)
                     .astype(jnp.int32))
+                if "sync" in snap:
+                    new_snap["sync"] = snap["sync"]
             staleness_depth = jnp.where(round_idx >= k, k, 0) \
                 .astype(jnp.int32)
         else:
@@ -603,6 +630,11 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
         s_engine = dataclasses.replace(engine, shard=ShardedLayout(
             row_axes=row_axes, col_axes=eff_cols, rows=row_size, cols=cols))
         row_e = _axis_entry(row_axes)
+        # the scalar quorum gate rides the elastic carry when present
+        # (init_train_state always adds it; load_train_state backfills
+        # legacy elastic checkpoints)
+        has_sync = elastic and state.snap is not None \
+            and "sync" in state.snap
 
         # GSPMD workaround (jax 0.4.37): when the specs leave mesh axes
         # unmentioned (the replicated-columns fallback), a
@@ -637,7 +669,7 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             g_ema = rest.pop() if lpf else None
             aux_loc = rest.pop(0) if aux else None
             snap_x = snap_aux = snap_l = snap_g = None
-            act_ring = active = missed = None
+            act_ring = active = missed = sync = None
             if stale1:
                 snap_x, snap_l, snap_g = rest
             elif dbuf:
@@ -655,6 +687,8 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                     act_ring = rest.pop(0)       # (k, M)
                     active = rest.pop(0)         # (M,)
                     missed = rest.pop(0)         # (M,) int32
+                    if has_sync:
+                        sync = rest.pop(0)       # () quorum gate
 
             # clock position of the round about to mix (pre-scan index —
             # same off-by-one fix as make_round_step)
@@ -830,6 +864,15 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                     cj_loc = jax.lax.dynamic_slice_in_dim(
                         cj, r_off, m_loc, 0) if row_size > 1 else cj
                     new_w = new_w + cj_loc[:, None] * (mean[None] - new_w)
+                    if has_sync:
+                        # quorum-degrade gate: sync == 0 reverts the whole
+                        # consensus application — every worker row keeps
+                        # its frozen/post-scan q and the aux center its
+                        # pre-round slab, bit-exactly (where select); the
+                        # ring still advances below
+                        new_w = jnp.where(sync > 0, new_w, q_loc)
+                        if aux:
+                            new_aux = jnp.where(sync > 0, new_aux, aux_loc)
                 if sk:
                     new_snap_x = jnp.concatenate(
                         [snap_x[1:], q_loc[None]], axis=0)
@@ -896,6 +939,8 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                         active,
                         jnp.where(eff > 0, 0, missed + 1)
                         .astype(jnp.int32)])
+                    if has_sync:
+                        outs.append(sync)
             if lpf:
                 outs.append(push_vec)       # rides LAST, like the input
             return tuple(outs)
@@ -954,6 +999,10 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
                              state.snap["missed"]])
                 in_specs.extend([P(), P(), P()])
                 out_specs.extend([P(), P(), P()])
+                if has_sync:
+                    args.append(state.snap["sync"])
+                    in_specs.append(P())
+                    out_specs.append(P())
         if lpf:
             # the filtered-gradient EMA: rows replicated (every column
             # shard mixes the full M rows), columns sharded — LAST operand
@@ -983,6 +1032,8 @@ def make_sharded_round_step(loss_fn, opt: Optimizer, dcfg: DPPFConfig, *,
             if elastic:
                 snap.update(act=rest.pop(0), active=rest.pop(0),
                             missed=rest.pop(0))
+                if has_sync:
+                    snap["sync"] = rest.pop(0)
         else:
             snap = state.snap
         new_state = TrainState(params=params, opt=opt_st,

@@ -9,22 +9,16 @@ deterministic feasibility frontier. ``scripted_runner`` is that runner;
 ``noisy_time_fn`` perturbs a timing oracle with bounded, seed-stable
 multiplicative noise for the property tests (noise must never flip the
 chosen point — selection goes through the calibrated MODEL score).
+
+``InjectedOOM`` itself now lives in ``repro.train.chaos`` — ONE shared
+fault-injection helper for the autotune rig, the chaos supervisor, and
+their tests — and is re-exported here for the existing imports.
 """
 from __future__ import annotations
 
 import hashlib
 
-
-class InjectedOOM(RuntimeError):
-    """A scripted device-memory failure. The message carries the
-    RESOURCE_EXHAUSTED token, which is ALL ``autotune.is_oom`` keys on —
-    the type is deliberately a plain RuntimeError subclass so the tuner
-    cannot cheat by catching a special class."""
-
-    def __init__(self, batch: int):
-        super().__init__(f"RESOURCE_EXHAUSTED: injected OOM at "
-                         f"batch={batch}")
-        self.batch = batch
+from repro.train.chaos import InjectedOOM  # noqa: F401 (shared contract)
 
 
 def default_time_fn(cand) -> float:

@@ -223,6 +223,65 @@ def main():
         expect_raises(ValueError,
                       lambda: load_pytree(p, {"w": np.zeros((2, 2))}),
                       "checkpoint shape mismatch")
+        with open(p, "r+b") as f:
+            f.truncate(40)
+        expect_raises(ValueError,
+                      lambda: load_pytree(p, {"w": np.zeros((3, 3))}),
+                      "checkpoint truncated archive")
+
+    # fault-tolerance surface (--chaos CI leg runs under -O): ChaosPlan
+    # authoring/payload guards, the membership tables, and the supervisor
+    # policy knobs all validate via ValueError, never assert
+    from repro.train import (ChaosEvent, ChaosPlan, HeartbeatMembership,
+                             ScheduleMembership, Supervisor)
+    expect_raises(ValueError, lambda: ChaosEvent(round=0, kind="meteor"),
+                  "ChaosEvent unknown kind")
+    expect_raises(ValueError, lambda: ChaosEvent(round=0, kind="oom"),
+                  "ChaosEvent oom without batch_above")
+    expect_raises(ValueError, lambda: ChaosEvent(round=0, kind="kill"),
+                  "ChaosEvent kill without worker")
+    expect_raises(ValueError, lambda: ChaosPlan.from_dict({"seed": 1}),
+                  "ChaosPlan malformed payload")
+    expect_raises(ValueError, lambda: ChaosPlan(version=99),
+                  "ChaosPlan version mismatch")
+    expect_raises(ValueError,
+                  lambda: HeartbeatMembership(2, timeout=0.0),
+                  "HeartbeatMembership timeout <= 0")
+    expect_raises(ValueError,
+                  lambda: ScheduleMembership(4, [(1, 3, 3)]),
+                  "ScheduleMembership empty drop window")
+    clk = RoundClock(total_steps=8, tau=4)
+    expect_raises(ValueError, lambda: Supervisor(clk, workers=4, quorum=-1),
+                  "Supervisor negative quorum")
+    expect_raises(ValueError, lambda: Supervisor(clk, workers=4, quorum=5),
+                  "Supervisor quorum > workers")
+    expect_raises(ValueError,
+                  lambda: Supervisor(clk, workers=4, retry_budget=-1),
+                  "Supervisor negative retry budget")
+    from repro.launch.roofline import supervisor_model
+    expect_raises(ValueError,
+                  lambda: supervisor_model(rounds=2, tau=2,
+                                           work_s_per_step=1e-3,
+                                           gather_bytes=1e6,
+                                           degraded_rounds=3),
+                  "supervisor_model degraded_rounds > rounds")
+
+    # launcher flag surface (argparse exits with code 2 on ap.error)
+    from repro.launch import train as train_mod
+    expect_raises(SystemExit,
+                  lambda: train_mod.main(["--smoke", "--elastic-drop",
+                                          "2,5,3", "--overlap",
+                                          "staleness_k"]),
+                  "--elastic-drop empty/negative window")
+    expect_raises(SystemExit,
+                  lambda: train_mod.main(["--smoke", "--quorum", "2"]),
+                  "--quorum without a membership source")
+    expect_raises(SystemExit,
+                  lambda: train_mod.main(["--smoke", "--elastic-drop",
+                                          "1,0,2", "--quorum", "2",
+                                          "--heartbeat-timeout", "0",
+                                          "--overlap", "staleness_k"]),
+                  "--heartbeat-timeout <= 0")
     print("python -O validation smoke: all checks raise")
 
 

@@ -501,6 +501,60 @@ print("ALL OK")
     assert "ALL OK" in out.stdout
 
 
+def test_elastic_rejoin_across_checkpoint_resume(tmp_path):
+    """Elastic membership state survives a checkpoint boundary: a run
+    saved MID-DROP (worker 1 out, missed counter live, catch-up still
+    ahead) resumes bit-for-bit against the uninterrupted run — the
+    participation ring, the missed counters, the new scalar ``sync``
+    gate, and the EASGD catch-up pull all round-trip through the npz."""
+    tau, k = 2, 2
+    Mw = 4
+    opt, p0, loss, batches = _mlp_setup(M=Mw, tau=tau)
+    dcfg = DPPFConfig(alpha=0.2, lam=0.4, tau=tau, engine="flat",
+                      overlap="staleness_k", staleness=k, elastic=True,
+                      elastic_catchup=0.5, lam_schedule="fixed")
+    clock = RoundClock.from_config(dcfg, base_lr=0.05, total_steps=12)
+    step = jax.jit(make_round_step(loss, opt, dcfg, clock=clock))
+    key = jax.random.PRNGKey(0)
+
+    def mask(r):
+        m = np.ones(Mw, np.float32)
+        if r in (2, 3):                    # dropped across the save point
+            m[1] = 0.0
+        return jnp.asarray(m)
+
+    full = init_train_state(p0, opt, dcfg, Mw, key)
+    half = init_train_state(p0, opt, dcfg, Mw, key)
+    for r in range(6):
+        full = set_participation(full, mask(r))
+        full, _ = step(full, batches(r))
+        if r < 3:
+            half = set_participation(half, mask(r))
+            half, _ = step(half, batches(r))
+    # checkpoint after round 2: worker 1 has missed one round and is
+    # still inside its drop window
+    assert int(half.snap["missed"][1]) == 1
+    path = str(tmp_path / "middrop.npz")
+    save_train_state(path, half)
+    like = init_train_state(p0, opt, dcfg, Mw, key)
+    res = load_train_state(path, like, clock=clock)
+    assert int(res.round) == 3
+    assert int(res.snap["missed"][1]) == 1
+    assert float(res.snap["sync"]) == 1.0  # the quorum gate round-trips
+    np.testing.assert_array_equal(np.asarray(res.snap["active"]),
+                                  np.asarray(half.snap["active"]))
+    # finish the drop window and the rejoin catch-up post-resume
+    for r in range(3, 6):
+        res = set_participation(res, mask(r))
+        res, _ = step(res, batches(r))
+    np.testing.assert_array_equal(np.asarray(res.params),
+                                  np.asarray(full.params))
+    np.testing.assert_array_equal(np.asarray(res.snap["missed"]),
+                                  np.asarray(full.snap["missed"]))
+    np.testing.assert_array_equal(np.asarray(res.snap["x"]),
+                                  np.asarray(full.snap["x"]))
+
+
 def test_elastic_convergence_single_device():
     """End-task sanity: an elastic run with a transient dropout stays
     finite and close to the always-on run (the drop is bounded by k)."""
